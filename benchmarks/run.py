@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one entry per paper artifact:
+
+    param_efficiency  -> Tables 2-4 "# Params (%)" columns (exact analytic)
+    rte_proxy         -> Table 1 (low-intrinsic-rank task parity)
+    drop_proxy        -> Table 2 / Fig. 4 (high-rank task, methods sweep)
+    subspace          -> Fig. 2 / App. A (intrinsic-rank diagnostic)
+    commonsense_proxy -> Tables 3-4 (joint multi-task fine-tuning)
+    kernel_bench      -> Limitations section (fused chain vs sequential)
+    roofline          -> EXPERIMENTS.md roofline table from dry-run records
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        commonsense_proxy,
+        drop_proxy,
+        fig4_sweep,
+        kernel_bench,
+        param_efficiency,
+        roofline,
+        rte_proxy,
+        subspace,
+    )
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (param_efficiency, rte_proxy, drop_proxy, fig4_sweep,
+                subspace, commonsense_proxy, kernel_bench, roofline):
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.__name__, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"benchmarks/FAILURES,0,{failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving with merged QuanTA weights (zero inference overhead).
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Fine-tunes briefly, merges the adapter into the weights, then serves a
+wave of prompts through the continuous-batching engine — and verifies the
+merged deployment matches the adapter-attached model token-for-token."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core.peft import PeftConfig, attach, merge_all
+from repro.data import ByteTokenizer, SyntheticSeq2Task
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.serve import Request, ServingEngine
+from repro.train import TrainState, make_train_step
+
+
+def main():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, peft = attach(jax.random.PRNGKey(1), params,
+                        PeftConfig(method="quanta", n_axes=3, scheme=None))
+    opt = AdamW(lr=5e-3)
+    state = TrainState.create(base, peft, opt)
+    step = jax.jit(make_train_step(model, opt))
+    data = SyntheticSeq2Task(vocab_size=cfg.vocab_size, seq_len=24,
+                             global_batch=16, task_rank=8)
+    for i in range(20):
+        state, _ = step(state, {k: jnp.asarray(v)
+                                for k, v in data.batch(i).items()})
+
+    merged = merge_all(state.params, state.peft)
+
+    engine = ServingEngine(model, merged, n_slots=4, max_len=64)
+    engine_adapter = ServingEngine(model, state.params, state.peft,
+                                   n_slots=4, max_len=64)
+    prompts = [[3, 141, 59], [26, 5], [35, 89, 79, 32], [38, 46], [2, 7, 18]]
+    reqs_m = [Request(uid=i, prompt=p, max_new_tokens=8)
+              for i, p in enumerate(prompts)]
+    reqs_a = [Request(uid=i, prompt=list(p), max_new_tokens=8)
+              for i, p in enumerate(prompts)]
+    for rm, ra in zip(reqs_m, reqs_a):
+        engine.submit(rm)
+        engine_adapter.submit(ra)
+    engine.run()
+    engine_adapter.run()
+    for rm, ra in zip(reqs_m, reqs_a):
+        status = "==" if rm.output == ra.output else "!="
+        print(f"req {rm.uid}: merged {rm.output} {status} adapter {ra.output}")
+        assert rm.output == ra.output, "merged serving must match adapter"
+    print("all merged-weight generations match the adapter-attached model")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Fault-tolerant checkpointing: atomic manifests, hashes, async save,
+elastic (re-mesh) restore."""
+
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    restore_resharded,
+    save,
+)

@@ -1,0 +1,77 @@
+"""Config registry: ``--arch <id>`` resolution for launcher / dry-run /
+benchmarks.  One module per assigned architecture (+ the paper's own
+llama2-7b base)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.core.peft import PeftConfig
+from repro.models.common import ModelConfig, ShapeConfig
+from repro.configs.shapes import SHAPES, shapes_for, skipped_shapes
+
+__all__ = [
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke",
+    "get_peft",
+    "get_shapes",
+    "get_notes",
+    "list_cells",
+]
+
+# arch id -> module name
+_MODULES: Dict[str, str] = {
+    "phi3-medium-14b": "phi3_medium_14b",
+    "minicpm-2b": "minicpm_2b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "yi-6b": "yi_6b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "musicgen-large": "musicgen_large",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "pixtral-12b": "pixtral_12b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "llama2-7b-proxy": "llama2_7b_proxy",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(k for k in _MODULES if k != "llama2-7b-proxy")
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).FULL
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def get_peft(arch: str) -> PeftConfig:
+    return _module(arch).PEFT
+
+
+def get_notes(arch: str) -> str:
+    return getattr(_module(arch), "NOTES", "")
+
+
+def get_shapes(arch: str) -> Tuple[ShapeConfig, ...]:
+    return shapes_for(get_config(arch).family)
+
+
+def list_cells(include_skipped: bool = False) -> List[Tuple[str, ShapeConfig, bool]]:
+    """All (arch, shape, runnable) cells of the assigned grid."""
+    cells = []
+    for arch in ARCH_IDS:
+        fam = get_config(arch).family
+        for shape in SHAPES:
+            runnable = shape in shapes_for(fam)
+            if runnable or include_skipped:
+                cells.append((arch, shape, runnable))
+    return cells

@@ -1,0 +1,42 @@
+"""llama2-7b (the paper's own base model): 32L d_model=4096 32H (MHA)
+d_ff=11008 vocab=32000 [arXiv:2307.09288].  Included so the paper's
+experiments (DROP / commonsense / arithmetic, Tables 2-4) map onto a
+config in this framework; QuanTA scheme 16-8-8-4 matches the paper's
+0.041% trainable-parameter setting."""
+
+import jax.numpy as jnp
+
+from repro.core.peft import PeftConfig
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="llama2-7b-proxy",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=32000,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+    quanta_scheme="16-8-8-4",
+)
+
+SMOKE = ModelConfig(
+    name="llama2-7b-proxy-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=176,
+    vocab_size=256,
+    q_block=32,
+)
+
+PEFT = PeftConfig(method="quanta", n_axes=4, scheme=FULL.quanta_scheme,
+                  targets=(r".*/(q_proj|v_proj)$",))
+NOTES = "Paper base model; not part of the assigned 10-arch grid."

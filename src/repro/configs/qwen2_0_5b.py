@@ -1,0 +1,44 @@
+"""qwen2-0.5b [dense]: 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151936 — GQA with QKV bias, tied embeddings [arXiv:2407.10671]."""
+
+import jax.numpy as jnp
+
+from repro.core.peft import PeftConfig
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+    quanta_scheme="16-8-7",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-0.5b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    qkv_bias=True,
+    tie_embeddings=True,
+    q_block=32,
+)
+
+PEFT = PeftConfig(method="quanta", n_axes=3, scheme=FULL.quanta_scheme,
+                  targets=(r".*/(q_proj|v_proj)$",))
+NOTES = "long_500k skipped: pure full attention."

@@ -1,0 +1,45 @@
+"""QuanTA core: the paper's contribution as a composable JAX module."""
+
+from repro.core.factorize import (
+    factorize,
+    flops_per_token,
+    pair_schedule,
+    param_count,
+    parse_scheme,
+    prime_factors,
+)
+from repro.core.quanta import (
+    QuantaAdapter,
+    apply_einsum,
+    apply_einsum_expr,
+    apply_sequential,
+    fold_frozen_copy,
+    init_tensors,
+    materialize,
+    materialize_einsum,
+    merge,
+    operator_einsum_expr,
+    tensor_shapes,
+)
+from repro.core.baselines import (
+    BottleneckAdapter,
+    DoraAdapter,
+    KronaAdapter,
+    LoraAdapter,
+)
+from repro.core.peft import (
+    PeftConfig,
+    attach,
+    count_params,
+    get_adapter,
+    merge_all,
+    peft_linear,
+    trainable_fraction,
+)
+from repro.core.analysis import (
+    effective_rank,
+    operator_rank,
+    rank_bounds,
+    similarity_grid,
+    subspace_similarity,
+)

@@ -1,0 +1,87 @@
+"""Rank / subspace analysis utilities (paper §3, §6, App. A).
+
+* :func:`subspace_similarity` — the Grassmann-style overlap
+  ``phi(i, j) = ||V1[:, :i]^T V2[:, :j]||_F^2 / min(i, j)`` used to measure
+  the "intrinsic rank" of fine-tuning updates (App. A, Eq. A.1).
+* :func:`similarity_grid` — the full (i, j) grid behind Fig. 2 / A.1 / A.2.
+* :func:`operator_rank` — numerical rank of a materialized operator.
+* :func:`rank_bounds` — the two sides of the rank representation theorem
+  (Thm. 6.2, Eq. 10), used by the property tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "subspace_similarity",
+    "similarity_grid",
+    "operator_rank",
+    "rank_bounds",
+    "effective_rank",
+]
+
+
+def subspace_similarity(v1: jnp.ndarray, v2: jnp.ndarray, i: int, j: int) -> float:
+    """App. A Eq. (A.1): overlap of the first ``i`` and ``j`` right singular
+    vectors.  ``v1``/``v2`` are the (column-orthonormal) V matrices of the
+    two weight updates."""
+    a = v1[:, :i]
+    b = v2[:, :j]
+    return float(jnp.linalg.norm(a.T @ b) ** 2 / min(i, j))
+
+
+def similarity_grid(
+    dw1: jnp.ndarray, dw2: jnp.ndarray, max_i: int, max_j: int
+) -> np.ndarray:
+    """Full subspace-similarity grid between two weight updates (Fig. 2).
+
+    Entry ``[i-1, j-1]`` is ``phi(i, j)``; computed in O(max_i*max_j) from a
+    single cross-Gram matrix instead of repeated norms.
+    """
+    _, _, vt1 = jnp.linalg.svd(dw1, full_matrices=False)
+    _, _, vt2 = jnp.linalg.svd(dw2, full_matrices=False)
+    v1 = vt1[:max_i].T  # (d, max_i)
+    v2 = vt2[:max_j].T
+    g = np.asarray(v1.T @ v2)  # (max_i, max_j) cross-Gram
+    sq = g**2
+    # phi(i, j) = sum_{<=i, <=j} g^2 / min(i, j): 2-D prefix sums.
+    csum = sq.cumsum(axis=0).cumsum(axis=1)
+    i_idx = np.arange(1, max_i + 1)[:, None]
+    j_idx = np.arange(1, max_j + 1)[None, :]
+    return csum / np.minimum(i_idx, j_idx)
+
+
+def operator_rank(mat: jnp.ndarray, rtol: float = 1e-5) -> int:
+    """Numerical rank via SVD with relative tolerance."""
+    s = jnp.linalg.svd(mat, compute_uv=False)
+    return int(jnp.sum(s > rtol * s[0]))
+
+
+def effective_rank(mat: jnp.ndarray) -> float:
+    """Entropy-based effective rank (Roy & Vetterli): exp(H(sigma/sum))."""
+    s = jnp.linalg.svd(mat, compute_uv=False)
+    p = s / jnp.maximum(jnp.sum(s), 1e-30)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0))
+    return float(jnp.exp(h))
+
+
+def rank_bounds(
+    tensor_ranks: Sequence[int],
+    tensor_dims: Sequence[int],
+    d: int,
+) -> Tuple[int, int]:
+    """Thm. 6.2 Eq. (10):  lower/upper bound on the full operator rank.
+
+    ``tensor_ranks[a]`` = rank of tensor a (as a (dm*dn, dm*dn) matrix),
+    ``tensor_dims[a]`` = dm*dn, ``d`` = total dimension.
+    """
+    n_t = len(tensor_ranks)
+    per_tensor = [d * r // dd for r, dd in zip(tensor_ranks, tensor_dims)]
+    lower = sum(per_tensor) - d * (n_t - 1)
+    upper = min(per_tensor)
+    return max(lower, 0), upper

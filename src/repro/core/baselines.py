@@ -1,0 +1,199 @@
+"""Baseline PEFT methods the paper compares against (§2, §7, App. F).
+
+All weight-level adapters share the ``delta(x)`` / ``matrix()`` /
+``merge(w0)`` protocol of :class:`repro.core.quanta.QuantaAdapter` so the
+attachment layer (``repro.core.peft``) treats them uniformly:
+
+* :class:`LoraAdapter`      — Hu et al. 2022 (``ΔW = B A``, rank r)
+* :class:`DoraAdapter`      — Liu et al. 2024 (magnitude/direction decomposition)
+* :class:`KronaAdapter`     — Edalati et al. 2022 (``ΔW = A ⊗ B``); the paper
+  notes KronA is a special case of QuanTA (Thm. 6.1 remark)
+* :class:`BottleneckAdapter`— Houlsby-style series / He-style parallel adapter
+  (block-level; used by the benchmark model, not mergeable)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LoraAdapter",
+    "DoraAdapter",
+    "KronaAdapter",
+    "BottleneckAdapter",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LoraAdapter:
+    """LoRA: ``y = x @ W0 + (alpha/r) * (x @ A) @ B`` (x@W convention).
+
+    ``A (d_in, r)`` Gaussian init, ``B (r, d_out)`` zero init, so the update
+    starts at zero (LoRA's own zero-init mechanism).
+    """
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+    alpha: float = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def create(key, d_in: int, d_out: int, *, rank: int, alpha: float = 16.0,
+               dtype=jnp.float32) -> "LoraAdapter":
+        a = jax.random.normal(key, (d_in, rank), dtype) / math.sqrt(d_in)
+        b = jnp.zeros((rank, d_out), dtype)
+        return LoraAdapter(a, b, float(alpha))
+
+    @property
+    def rank(self) -> int:
+        return self.a.shape[1]
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+    @property
+    def num_params(self) -> int:
+        return self.a.size + self.b.size
+
+    def delta(self, x: jnp.ndarray) -> jnp.ndarray:
+        h = x.astype(self.a.dtype)
+        return (self.scale * ((h @ self.a) @ self.b)).astype(x.dtype)
+
+    def matrix(self) -> jnp.ndarray:
+        return self.scale * (self.a @ self.b)
+
+    def merge(self, w0: jnp.ndarray) -> jnp.ndarray:
+        m = self.matrix()
+        return (w0.astype(m.dtype) + m).astype(w0.dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DoraAdapter:
+    """DoRA: ``W' = m * (W0 + ΔW_lora) / ||W0 + ΔW_lora||_col``.
+
+    Unlike pure delta adapters, DoRA rescales the whole weight, so it exposes
+    ``forward(x, w0)`` instead of ``delta(x)``.  ``m`` initializes to the
+    column norms of ``W0`` so the layer starts exactly at the base model.
+    """
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+    m: jnp.ndarray
+    alpha: float = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def create(key, w0: jnp.ndarray, *, rank: int, alpha: float = 16.0,
+               dtype=jnp.float32) -> "DoraAdapter":
+        d_in, d_out = w0.shape
+        a = jax.random.normal(key, (d_in, rank), dtype) / math.sqrt(d_in)
+        b = jnp.zeros((rank, d_out), dtype)
+        m = jnp.linalg.norm(w0.astype(dtype), axis=0)
+        return DoraAdapter(a, b, m, float(alpha))
+
+    @property
+    def num_params(self) -> int:
+        return self.a.size + self.b.size + self.m.size
+
+    def adapted_weight(self, w0: jnp.ndarray) -> jnp.ndarray:
+        w = w0.astype(self.a.dtype) + (self.alpha / self.a.shape[1]) * (
+            self.a @ self.b
+        )
+        col_norm = jnp.linalg.norm(w, axis=0, keepdims=True)
+        return (self.m[None, :] * w / jnp.maximum(col_norm, 1e-12)).astype(
+            w0.dtype
+        )
+
+    def forward(self, x: jnp.ndarray, w0: jnp.ndarray) -> jnp.ndarray:
+        return x @ self.adapted_weight(w0)
+
+    def merge(self, w0: jnp.ndarray) -> jnp.ndarray:
+        return self.adapted_weight(w0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KronaAdapter:
+    """KronA: ``ΔW = s * (A ⊗ B)`` with ``A (a_i, a_o)``, ``B (b_i, b_o)``,
+    ``a_i*b_i = d_in``, ``a_o*b_o = d_out`` (x@W convention).
+
+    Equivalent to a 2-axis QuanTA with two single-axis gates (paper remark
+    after Thm. 6.1) — tested against that construction.
+    """
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+    scale: float = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def create(key, d_in: int, d_out: int, *, a_in: int, a_out: int | None = None,
+               scale: float = 1.0, dtype=jnp.float32) -> "KronaAdapter":
+        a_out = a_out if a_out is not None else a_in
+        if d_in % a_in or d_out % a_out:
+            raise ValueError(f"KronA factors must divide: {d_in}%{a_in}, {d_out}%{a_out}")
+        b_in, b_out = d_in // a_in, d_out // a_out
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, (a_in, a_out), dtype) / math.sqrt(a_in)
+        b = jnp.zeros((b_in, b_out), dtype)  # zero factor -> zero update at init
+        return KronaAdapter(a, b, float(scale))
+
+    @property
+    def num_params(self) -> int:
+        return self.a.size + self.b.size
+
+    def delta(self, x: jnp.ndarray) -> jnp.ndarray:
+        a_in, a_out = self.a.shape
+        b_in, b_out = self.b.shape
+        h = x.astype(self.a.dtype)
+        batch = h.shape[:-1]
+        h = h.reshape(*batch, a_in, b_in)
+        # (x reshaped (a_in, b_in)) -> A^T x B : (a_out, b_out)
+        y = jnp.einsum("...ab,ac,bd->...cd", h, self.a, self.b)
+        return (self.scale * y.reshape(*batch, a_out * b_out)).astype(x.dtype)
+
+    def matrix(self) -> jnp.ndarray:
+        return self.scale * jnp.kron(self.a, self.b)
+
+    def merge(self, w0: jnp.ndarray) -> jnp.ndarray:
+        m = self.matrix()
+        return (w0.astype(m.dtype) + m).astype(w0.dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BottleneckAdapter:
+    """Series / parallel bottleneck adapter (Houlsby et al.; He et al.).
+
+    ``f(h) = h (+ series) / x (+ parallel) -> down (d, r) -> ReLU -> up (r, d)``
+    with residual.  Not mergeable into the base weights (adds inference
+    latency — exactly the drawback §2 attributes to adapter-based methods).
+    """
+
+    down: jnp.ndarray
+    up: jnp.ndarray
+    bias_down: jnp.ndarray
+    bias_up: jnp.ndarray
+
+    @staticmethod
+    def create(key, d: int, *, bottleneck: int, dtype=jnp.float32
+               ) -> "BottleneckAdapter":
+        kd, ku = jax.random.split(key)
+        down = jax.random.normal(kd, (d, bottleneck), dtype) / math.sqrt(d)
+        up = jnp.zeros((bottleneck, d), dtype)  # zero-init output proj
+        return BottleneckAdapter(
+            down, up, jnp.zeros((bottleneck,), dtype), jnp.zeros((d,), dtype)
+        )
+
+    @property
+    def num_params(self) -> int:
+        return self.down.size + self.up.size + self.bias_down.size + self.bias_up.size
+
+    def __call__(self, h: jnp.ndarray) -> jnp.ndarray:
+        z = jax.nn.relu(h.astype(self.down.dtype) @ self.down + self.bias_down)
+        return h + (z @ self.up + self.bias_up).astype(h.dtype)

@@ -1,0 +1,279 @@
+"""PEFT attachment layer: wires adapters (QuanTA / LoRA / DoRA / KronA)
+onto a model's parameter pytree.
+
+Models in ``repro.models`` store every adaptable linear as a 2-D weight
+``(d_in, d_out)`` or, for scan-over-layers stacks, ``(L, d_in, d_out)``.
+Adapters mirror the parameter tree: ``peft_params`` is a nested dict with
+the same key paths holding adapter pytrees (stacked along the layer axis
+for scanned stacks, so ``jax.lax.scan`` slices them in lockstep with the
+weights).
+
+The public API:
+
+* :func:`attach` — create adapters for every target path; for QuanTA this
+  also folds the frozen initialization copy into the base weights (Eq. 9),
+  returning ``(folded_base_params, peft_params)``.
+* :func:`merge_all` — merge trained adapters into the base weights for
+  deployment (no inference overhead, paper §6).
+* :func:`peft_linear` — the adapted linear used by all models.
+* :func:`count_params` / :func:`trainable_fraction` — paper-style "# Params (%)".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quanta as Q
+from repro.core.baselines import DoraAdapter, KronaAdapter, LoraAdapter
+from repro.core.factorize import factorize, parse_scheme
+
+__all__ = [
+    "PeftConfig",
+    "attach",
+    "merge_all",
+    "peft_linear",
+    "get_adapter",
+    "count_params",
+    "trainable_fraction",
+    "flatten_paths",
+]
+
+# Default target modules per the paper (Table E.2-E.4): q_proj and v_proj.
+DEFAULT_TARGETS = (r".*/(q_proj|v_proj)$",)
+
+
+@dataclasses.dataclass(frozen=True)
+class PeftConfig:
+    """Which method to attach, where, and with what hyperparameters."""
+
+    method: str = "quanta"  # quanta | lora | dora | krona | ft | none
+    targets: Tuple[str, ...] = DEFAULT_TARGETS
+    # QuanTA
+    n_axes: int = 4
+    scheme: Optional[str] = None          # e.g. "16-8-8-4" (paper notation)
+    rounds: int = 1                       # repetitions of the pairwise
+    #                                       schedule (paper E.1 uses 1; more
+    #                                       rounds enlarge the chain manifold
+    #                                       toward universality, App. C)
+    init: str = "identity_noise"
+    noise_scale: float = 0.02
+    # LoRA / DoRA
+    rank: int = 8
+    alpha: float = 16.0
+    # KronA
+    krona_a: int = 64
+    # numerics
+    dtype: Any = jnp.float32
+
+    def replace(self, **kw) -> "PeftConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def flatten_paths(tree: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    """Flatten a nested dict into ``{"a/b/c": leaf}``."""
+    out: Dict[str, Any] = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flatten_paths(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def _set_path(tree: Dict[str, Any], path: str, value: Any) -> None:
+    keys = path.split("/")
+    node = tree
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = value
+
+
+def _match(path: str, patterns: Tuple[str, ...]) -> bool:
+    return any(re.fullmatch(p, path) for p in patterns)
+
+
+def choose_dims(
+    d_in: int, d_out: int, n_axes: int, scheme: Optional[str] = None
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Pick QuanTA axis factorizations for a (possibly rectangular) weight.
+
+    Square: the config's paper-style scheme (e.g. ``"16-8-8-5"``) or a
+    balanced auto-factorization.  Rectangular (App. B): the simple ratio
+    ``d_in/d_out = p/q`` is carried entirely by axis 0, so
+    ``dims_in = (p*a, rest)`` and ``dims_out = (q*a, rest)`` with
+    ``(a, *rest) = factorize(d_in / p)``.
+    """
+    if d_in == d_out:
+        dims = parse_scheme(scheme) if scheme else factorize(d_in, n_axes)
+        if math.prod(dims) != d_in:
+            raise ValueError(f"scheme {scheme} does not factor d={d_in}")
+        return dims, dims
+    g = math.gcd(d_in, d_out)
+    p, q = d_in // g, d_out // g
+    if d_in % p:
+        raise ValueError(f"no simple-ratio factorization for {d_in}->{d_out}")
+    base = factorize(d_in // p, n_axes)
+    return (p * base[0],) + base[1:], (q * base[0],) + base[1:]
+
+
+def _make_adapter(key, w: jnp.ndarray, cfg: PeftConfig):
+    """Build one adapter (possibly layer-stacked) for weight ``w``."""
+    stacked = w.ndim == 3
+    d_in, d_out = (w.shape[1], w.shape[2]) if stacked else (w.shape[0], w.shape[1])
+
+    def make_one(k):
+        if cfg.method == "quanta":
+            dims_in, dims_out = choose_dims(
+                d_in, d_out, cfg.n_axes, cfg.scheme
+            )
+            pairs = None
+            if cfg.rounds > 1:
+                from repro.core.factorize import pair_schedule
+                base_sched = pair_schedule(len(dims_in))
+                # rectangular first round maps axis 0; later rounds square
+                pairs = base_sched * cfg.rounds
+            return Q.QuantaAdapter.create(
+                k, d_in, d_out, n_axes=cfg.n_axes, dims_in=dims_in,
+                dims_out=dims_out, pairs=pairs,
+                init=cfg.init, noise_scale=cfg.noise_scale, dtype=cfg.dtype,
+            )
+        if cfg.method == "lora":
+            return LoraAdapter.create(
+                k, d_in, d_out, rank=cfg.rank, alpha=cfg.alpha, dtype=cfg.dtype
+            )
+        if cfg.method == "dora":
+            w2 = w[0] if stacked else w  # init magnitude from layer 0 template
+            return DoraAdapter.create(
+                k, w2.astype(cfg.dtype), rank=cfg.rank, alpha=cfg.alpha,
+                dtype=cfg.dtype,
+            )
+        if cfg.method == "krona":
+            a_in = math.gcd(cfg.krona_a, d_in)
+            a_out = math.gcd(a_in, d_out)
+            return KronaAdapter.create(
+                k, d_in, d_out, a_in=a_in, a_out=a_out, dtype=cfg.dtype
+            )
+        raise ValueError(f"unknown PEFT method {cfg.method!r}")
+
+    if not stacked:
+        return make_one(key)
+    n_layers = w.shape[0]
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(make_one)(keys)
+
+
+def _fold_quanta(w: jnp.ndarray, adapter) -> jnp.ndarray:
+    """Fold the frozen copy S into (possibly stacked) base weights."""
+    if w.ndim == 3:
+        return jax.vmap(Q.fold_frozen_copy)(w, adapter)
+    return Q.fold_frozen_copy(w, adapter)
+
+
+def attach(
+    key: jax.Array, params: Dict[str, Any], cfg: PeftConfig
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Create adapters for every parameter path matching ``cfg.targets``.
+
+    Returns ``(base_params, peft_params)``.  For QuanTA, ``base_params`` has
+    the frozen initialization copy folded in (``W0' = W0 - S``, Eq. 8/9) so
+    the adapted model is exactly the base model at step 0.  For the other
+    methods the adapters are zero-initialized by construction and the base
+    weights are returned unchanged.
+    """
+    if cfg.method in ("ft", "none"):
+        return params, {}
+    flat = flatten_paths(params)
+    targets = {p: w for p, w in flat.items() if _match(p, cfg.targets)}
+    if not targets:
+        raise ValueError(
+            f"no parameter matched targets {cfg.targets}; available paths: "
+            f"{sorted(flat)[:20]}..."
+        )
+    peft: Dict[str, Any] = {}
+    new_params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy tree
+    keys = jax.random.split(key, len(targets))
+    for k, (path, w) in zip(keys, sorted(targets.items())):
+        if w.ndim not in (2, 3):
+            raise ValueError(f"target {path} has ndim={w.ndim}; expected 2 or 3")
+        adapter = _make_adapter(k, w, cfg)
+        _set_path(peft, path, adapter)
+        if cfg.method == "quanta":
+            _set_path(new_params, path, _fold_quanta(w, adapter))
+    return new_params, peft
+
+
+def get_adapter(peft: Optional[Dict[str, Any]], *keys: str):
+    """Walk the adapter tree; returns None when the path is not adapted."""
+    node = peft
+    for k in keys:
+        if not isinstance(node, dict) or k not in node:
+            return None
+        node = node[k]
+    return node if not isinstance(node, dict) else None
+
+
+def peft_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    adapter=None,
+    bias: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """The adapted linear layer used by every model in ``repro.models``."""
+    if adapter is None:
+        y = x @ w
+    elif isinstance(adapter, DoraAdapter):
+        y = adapter.forward(x, w)
+    else:
+        y = x @ w + adapter.delta(x)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def _merge_one(w: jnp.ndarray, adapter) -> jnp.ndarray:
+    if isinstance(adapter, Q.QuantaAdapter):
+        fn = Q.merge
+    else:
+        fn = lambda w0, a: a.merge(w0)  # noqa: E731
+    if w.ndim == 3:
+        return jax.vmap(fn)(w, adapter)
+    return fn(w, adapter)
+
+
+def merge_all(params: Dict[str, Any], peft: Dict[str, Any]) -> Dict[str, Any]:
+    """Merge every adapter into the base weights (deployment form)."""
+    flat_adapters = _flatten_adapters(peft)
+    merged = jax.tree_util.tree_map(lambda x: x, params)
+    for path, adapter in flat_adapters.items():
+        flat = flatten_paths(params)
+        _set_path(merged, path, _merge_one(flat[path], adapter))
+    return merged
+
+
+def _flatten_adapters(peft: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in peft.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flatten_adapters(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def count_params(tree: Any) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def trainable_fraction(base_params: Any, peft: Any) -> float:
+    """Paper-style ``# Params (%)``: trainable / base totals."""
+    base = count_params(base_params)
+    trainable = count_params(peft)
+    return 100.0 * trainable / max(base, 1)

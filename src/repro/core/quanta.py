@@ -1,0 +1,397 @@
+"""QuanTA: Quantum-informed Tensor Adaptation (paper §5, App. B, App. G).
+
+The QuanTA operator is a product of "two-axis tensors" applied to a hidden
+vector reshaped into an N-axis tensor (a "qudit register"):
+
+    (T^(a) x)_{i_1..i_N} = sum_{j_m, j_n} T^(a)_{i_m, i_n; j_m, j_n}
+                           x_{i_1, .., j_m, .., j_n, .., i_N}
+    T x = prod_a T^(a) x                                       (Eq. 4, 5)
+
+Conventions used throughout this repository
+-------------------------------------------
+* Activations are row vectors: a linear layer is ``y = x @ W`` with
+  ``W.shape == (d_in, d_out)``.  The materialized QuanTA operator is
+  returned in the same convention, i.e. ``materialize(...)`` has shape
+  ``(d_in, d_out)`` and ``apply(x) == x @ materialize(...)``.
+* Each two-axis tensor is stored with shape ``(out_m, out_n, in_m, in_n)``
+  for the axis pair ``(m, n)``, ``m < n`` — matching the paper's
+  ``T_{i_m, i_n; j_m, j_n}`` index order.
+* The tensor list order equals the sequential application order (first
+  tensor in the list is applied to ``x`` first), which reproduces the
+  App. G generator exactly (verified against the N=3 example in §5:
+  ``einsum("...abc,efbc,diaf,ghde->...ghi", x, T_3, T_2, T_1)``).
+
+Rectangular layers (App. B): for ``W0 \\in R^{d_in x d_out}`` with a simple
+ratio, the *first* tensor in the schedule that touches axis 0 is rectangular
+(``out_0 != in_0``); all other axes keep their dimensions.
+
+Zero initialization (Eq. 8/9): the adapted layer starts as
+``y = W0 x + T_theta x - S x`` with ``S`` a frozen copy of the initialized
+tensors.  ``S`` is then folded into the base weight; note the paper's Eq. 9
+writes ``W0' = W0 + S`` but Eq. 8 requires ``W0' = W0 - S`` — we implement
+the mathematically consistent sign (``fold_frozen_copy`` subtracts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import string
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.factorize import factorize, pair_schedule, param_count
+
+__all__ = [
+    "QuantaAdapter",
+    "get_symbol",
+    "apply_einsum_expr",
+    "operator_einsum_expr",
+    "tensor_shapes",
+    "init_tensors",
+    "apply_sequential",
+    "apply_einsum",
+    "materialize",
+    "materialize_einsum",
+    "fold_frozen_copy",
+    "merge",
+]
+
+_SYMBOLS = string.ascii_lowercase + string.ascii_uppercase
+
+
+def get_symbol(i: int) -> str:
+    """Einsum subscript symbol #i (the paper uses ``opt_einsum.get_symbol``)."""
+    if i >= len(_SYMBOLS):
+        raise ValueError(f"einsum expression needs too many symbols ({i})")
+    return _SYMBOLS[i]
+
+
+# ---------------------------------------------------------------------------
+# Schedules and shapes
+# ---------------------------------------------------------------------------
+
+def tensor_shapes(
+    dims_in: Sequence[int],
+    pairs: Sequence[Tuple[int, int]],
+    dims_out: Sequence[int] | None = None,
+) -> Tuple[Tuple[int, int, int, int], ...]:
+    """Shape ``(out_m, out_n, in_m, in_n)`` of every tensor in the schedule.
+
+    Tracks the evolving per-axis dimensions: the first tensor touching axis 0
+    maps ``dims_in[0] -> dims_out[0]`` (rectangular case of App. B); all
+    other applications are square.
+    """
+    dims_out = tuple(dims_out) if dims_out is not None else tuple(dims_in)
+    if len(dims_out) != len(dims_in):
+        raise ValueError("dims_in and dims_out must have equal length")
+    for ax, (di, do) in enumerate(zip(dims_in, dims_out)):
+        if ax != 0 and di != do:
+            raise ValueError(
+                "rectangular QuanTA may only change axis 0 "
+                f"(axis {ax}: {di} -> {do})"
+            )
+    cur = list(dims_in)
+    shapes = []
+    for (m, n) in pairs:
+        if not (0 <= m < n < len(cur)):
+            raise ValueError(f"bad axis pair {(m, n)} for N={len(cur)}")
+        om = dims_out[m] if m == 0 else cur[m]
+        on = dims_out[n] if n == 0 else cur[n]
+        shapes.append((om, on, cur[m], cur[n]))
+        cur[m], cur[n] = om, on
+    if tuple(cur) != dims_out:
+        raise ValueError(
+            f"schedule {tuple(pairs)} never maps dims_in[0] {dims_in[0]} to "
+            f"dims_out[0] {dims_out[0]} (no tensor touches axis 0)"
+        )
+    return tuple(shapes)
+
+
+# ---------------------------------------------------------------------------
+# App. G einsum-expression generators
+# ---------------------------------------------------------------------------
+
+def apply_einsum_expr(
+    n_axes: int, pairs: Sequence[Tuple[int, int]] | None = None
+) -> str:
+    """Einsum expression applying the full chain to ``x`` (App. G, verbatim
+    port with positive-axis pairs).
+
+    >>> apply_einsum_expr(3)
+    '...abc,efbc,diaf,ghde->...ghi'
+    """
+    pairs = tuple(pairs) if pairs is not None else pair_schedule(n_axes)
+    cur = list(range(n_axes))
+    expr = "..." + "".join(get_symbol(i) for i in cur)
+    for (m, n) in pairs:
+        sm, sn = cur[m], cur[n]
+        om, on = sm + n_axes, sn + n_axes  # App. G: new symbol = old + N
+        expr += "," + get_symbol(om) + get_symbol(on) + get_symbol(sm) + get_symbol(sn)
+        cur[m], cur[n] = om, on
+    expr += "->..." + "".join(get_symbol(i) for i in cur)
+    return expr
+
+
+def operator_einsum_expr(
+    n_axes: int, pairs: Sequence[Tuple[int, int]] | None = None
+) -> str:
+    """Einsum expression materializing the full operator as ``(in; out)``.
+
+    Output subscripts are ``j_1..j_N i_1..i_N`` so the reshaped result is a
+    ``(d_in, d_out)`` matrix in the ``y = x @ M`` convention.
+    (The paper's App. G builds the ``(out; in)`` variant; ours is its
+    transpose to match the row-vector convention used by the models.)
+    """
+    pairs = tuple(pairs) if pairs is not None else pair_schedule(n_axes)
+    cur = list(range(n_axes))
+    operands = []
+    for (m, n) in pairs:
+        sm, sn = cur[m], cur[n]
+        om, on = sm + n_axes, sn + n_axes  # App. G: new symbol = old + N
+        operands.append(
+            get_symbol(om) + get_symbol(on) + get_symbol(sm) + get_symbol(sn)
+        )
+        cur[m], cur[n] = om, on
+    out = "".join(get_symbol(i) for i in range(n_axes)) + "".join(
+        get_symbol(i) for i in cur
+    )
+    return ",".join(operands) + "->" + out
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _identity_like(om: int, on: int, im: int, in_: int, dtype) -> jnp.ndarray:
+    """(Truncated/padded) identity for a tensor of shape (om,on,im,in)."""
+    eye = jnp.zeros((om * on, im * in_), dtype=dtype)
+    k = min(om * on, im * in_)
+    eye = eye.at[jnp.arange(k), jnp.arange(k)].set(1.0)
+    return eye.reshape(om, on, im, in_)
+
+
+def init_tensors(
+    key: jax.Array,
+    dims_in: Sequence[int],
+    dims_out: Sequence[int] | None = None,
+    pairs: Sequence[Tuple[int, int]] | None = None,
+    *,
+    init: str = "identity_noise",
+    noise_scale: float = 0.02,
+    dtype=jnp.float32,
+) -> Tuple[jnp.ndarray, ...]:
+    """Initialize the QuanTA tensor chain.
+
+    ``identity_noise`` (default): each tensor is (truncated) identity plus
+    small Gaussian noise — the chain starts full-rank and near-identity,
+    which keeps the operator well conditioned for the frozen-copy
+    cancellation trick (Eq. 8).  ``normal``: i.i.d. Gaussian with
+    1/sqrt(fan_in) scaling (ablation).
+    """
+    pairs = tuple(pairs) if pairs is not None else pair_schedule(len(dims_in))
+    shapes = tensor_shapes(dims_in, pairs, dims_out)
+    keys = jax.random.split(key, len(shapes))
+    tensors = []
+    for k, (om, on, im, in_) in zip(keys, shapes):
+        if init == "identity_noise":
+            base = _identity_like(om, on, im, in_, dtype)
+            t = base + noise_scale * jax.random.normal(
+                k, (om, on, im, in_), dtype
+            )
+        elif init == "normal":
+            t = jax.random.normal(k, (om, on, im, in_), dtype) / math.sqrt(
+                im * in_
+            )
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        tensors.append(t)
+    return tuple(tensors)
+
+
+# ---------------------------------------------------------------------------
+# Application paths
+# ---------------------------------------------------------------------------
+
+def apply_sequential(
+    x: jnp.ndarray,
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Sequence[int],
+    pairs: Sequence[Tuple[int, int]],
+    dims_out: Sequence[int] | None = None,
+) -> jnp.ndarray:
+    """Memory-light sequential path (paper §6 complexity analysis).
+
+    Each tensor application is a batched matmul: the pair axes are moved to
+    the minor positions, flattened, and contracted with the tensor reshaped
+    to ``(out_m*out_n, in_m*in_n)``.  This is also the schedule the Pallas
+    kernel fuses (see ``repro/kernels``).
+    """
+    dims_in = tuple(dims_in)
+    batch_shape = x.shape[:-1]
+    if x.shape[-1] != math.prod(dims_in):
+        raise ValueError(f"x last dim {x.shape[-1]} != prod{dims_in}")
+    nb = len(batch_shape)
+    h = x.reshape(*batch_shape, *dims_in)
+    for t, (m, n) in zip(tensors, pairs):
+        om, on, im, in_ = t.shape
+        h = jnp.moveaxis(h, (nb + m, nb + n), (-2, -1))
+        lead = h.shape[:-2]
+        h2 = h.reshape(*lead, im * in_)
+        y2 = h2 @ t.reshape(om * on, im * in_).T
+        h = y2.reshape(*lead, om, on)
+        h = jnp.moveaxis(h, (-2, -1), (nb + m, nb + n))
+    return h.reshape(*batch_shape, -1)
+
+
+def apply_einsum(
+    x: jnp.ndarray,
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Sequence[int],
+    pairs: Sequence[Tuple[int, int]],
+    dims_out: Sequence[int] | None = None,
+) -> jnp.ndarray:
+    """Single-einsum path (App. G) — joint contraction, optimized order."""
+    dims_in = tuple(dims_in)
+    batch_shape = x.shape[:-1]
+    h = x.reshape(*batch_shape, *dims_in)
+    expr = apply_einsum_expr(len(dims_in), pairs)
+    out = jnp.einsum(expr, h, *tensors, optimize=True)
+    return out.reshape(*batch_shape, -1)
+
+
+def materialize(
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Sequence[int],
+    pairs: Sequence[Tuple[int, int]],
+    dims_out: Sequence[int] | None = None,
+) -> jnp.ndarray:
+    """Materialize the full operator as a ``(d_in, d_out)`` matrix.
+
+    Built by applying the chain to the identity basis — numerically identical
+    to :func:`materialize_einsum` (tested) and cheaper for large N.
+    """
+    d_in = math.prod(dims_in)
+    eye = jnp.eye(d_in, dtype=tensors[0].dtype)
+    return apply_sequential(eye, tensors, dims_in, pairs, dims_out)
+
+
+def materialize_einsum(
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Sequence[int],
+    pairs: Sequence[Tuple[int, int]],
+    dims_out: Sequence[int] | None = None,
+) -> jnp.ndarray:
+    """Materialize via the App. G operator einsum expression."""
+    expr = operator_einsum_expr(len(dims_in), pairs)
+    full = jnp.einsum(expr, *tensors, optimize=True)
+    d_in = math.prod(dims_in)
+    return full.reshape(d_in, -1)
+
+
+# ---------------------------------------------------------------------------
+# Adapter pytree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantaAdapter:
+    """Trainable QuanTA state for one linear layer.
+
+    After :func:`fold_frozen_copy` the adapted layer is (Eq. 9)::
+
+        y = x @ w0_folded + adapter.delta(x)
+    """
+
+    tensors: Tuple[jnp.ndarray, ...]
+    dims_in: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    dims_out: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    pairs: Tuple[Tuple[int, int], ...] = dataclasses.field(
+        metadata=dict(static=True)
+    )
+
+    @staticmethod
+    def create(
+        key: jax.Array,
+        d_in: int,
+        d_out: int | None = None,
+        *,
+        n_axes: int = 4,
+        dims_in: Sequence[int] | None = None,
+        dims_out: Sequence[int] | None = None,
+        pairs: Sequence[Tuple[int, int]] | None = None,
+        init: str = "identity_noise",
+        noise_scale: float = 0.02,
+        dtype=jnp.float32,
+    ) -> "QuantaAdapter":
+        d_out = d_out if d_out is not None else d_in
+        if dims_in is None:
+            dims_in = factorize(d_in, n_axes)
+        dims_in = tuple(dims_in)
+        if math.prod(dims_in) != d_in:
+            raise ValueError(f"prod{dims_in} != d_in={d_in}")
+        if dims_out is None:
+            if d_out == d_in:
+                dims_out = dims_in
+            else:
+                # App. B: only axis 0 is rectangular; requires a simple ratio.
+                if d_out % (d_in // dims_in[0]) != 0:
+                    raise ValueError(
+                        f"d_out={d_out} not reachable from dims_in={dims_in} "
+                        "by changing axis 0 only"
+                    )
+                dims_out = (d_out * dims_in[0] // d_in,) + dims_in[1:]
+        dims_out = tuple(dims_out)
+        if math.prod(dims_out) != d_out:
+            raise ValueError(f"prod{dims_out} != d_out={d_out}")
+        pairs = tuple(pairs) if pairs is not None else pair_schedule(len(dims_in))
+        tensors = init_tensors(
+            key, dims_in, dims_out, pairs,
+            init=init, noise_scale=noise_scale, dtype=dtype,
+        )
+        return QuantaAdapter(tensors, dims_in, dims_out, pairs)
+
+    @property
+    def d_in(self) -> int:
+        return math.prod(self.dims_in)
+
+    @property
+    def d_out(self) -> int:
+        return math.prod(self.dims_out)
+
+    @property
+    def num_params(self) -> int:
+        return param_count(self.dims_in, self.pairs, self.dims_out)
+
+    def delta(self, x: jnp.ndarray) -> jnp.ndarray:
+        """``T_theta x`` for batched ``x (..., d_in) -> (..., d_out)``."""
+        return apply_sequential(
+            x.astype(self.tensors[0].dtype),
+            self.tensors, self.dims_in, self.pairs, self.dims_out,
+        ).astype(x.dtype)
+
+    def matrix(self) -> jnp.ndarray:
+        """Full ``(d_in, d_out)`` operator matrix."""
+        return materialize(self.tensors, self.dims_in, self.pairs, self.dims_out)
+
+
+def fold_frozen_copy(w0: jnp.ndarray, adapter: QuantaAdapter) -> jnp.ndarray:
+    """Fold the frozen initialization copy ``S`` into the base weight.
+
+    Implements Eq. 8 -> Eq. 9: ``y = W0 x + T x - S x`` becomes
+    ``y = (W0 - S) x + T x`` where at call time ``S == T`` (``adapter`` holds
+    the freshly initialized tensors).  The returned weight keeps ``w0``'s
+    dtype; the subtraction happens in the adapter's (higher) precision.
+    """
+    s_mat = adapter.matrix()
+    return (w0.astype(s_mat.dtype) - s_mat).astype(w0.dtype)
+
+
+def merge(w0_folded: jnp.ndarray, adapter: QuantaAdapter) -> jnp.ndarray:
+    """Merge the trained operator into the base weight (no inference
+    overhead, paper §6): ``W = W0' + T_theta``."""
+    t_mat = adapter.matrix()
+    return (w0_folded.astype(t_mat.dtype) + t_mat).astype(w0_folded.dtype)

@@ -1,0 +1,9 @@
+"""Data substrate: tokenizer, packing, deterministic sharded loaders."""
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.pipeline import (
+    PackedDataset,
+    SyntheticLM,
+    SyntheticSeq2Task,
+    pack_documents,
+)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for QuanTA's compute hot-spots.
+
+Validated in interpret mode on CPU (this container); Mosaic-compiled on
+real TPUs.  See EXPERIMENTS.md §Perf for the fusion napkin math.
+"""
+
+from repro.kernels.ops import quanta_apply_fused, quanta_linear_fused
+from repro.kernels.ref import quanta_apply_ref, quanta_linear_ref

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles batching (arbitrary leading dims flattened to rows), row padding
+to the block size, the VMEM-budget dispatch between the fused-linear
+kernel and the XLA-matmul + fused-chain fallback, and interpret-mode
+selection (interpret=True on CPU — the container's validation mode; real
+TPUs compile the same kernels via Mosaic).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quanta import QuantaAdapter
+from repro.kernels.quanta_apply import quanta_apply_kernel_call
+from repro.kernels.quanta_linear import quanta_linear_kernel_call
+
+__all__ = ["quanta_apply_fused", "quanta_linear_fused", "fused_vmem_ok"]
+
+VMEM_BUDGET_BYTES = 12 * 2**20  # ~12 MiB usable of 16 MiB v5e VMEM
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _flatten_rows(x: jnp.ndarray, block_rows: int):
+    batch = x.shape[:-1]
+    rows = math.prod(batch) if batch else 1
+    xf = x.reshape(rows, x.shape[-1])
+    pad = (-rows) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    return xf, batch, rows
+
+
+def quanta_apply_fused(
+    x: jnp.ndarray,
+    adapter: QuantaAdapter,
+    *,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused chain application: drop-in for ``adapter.delta`` (tested
+    allclose against both oracles)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    xf, batch, rows = _flatten_rows(x, block_rows)
+    tensors = [t.astype(x.dtype) for t in adapter.tensors]
+    out = quanta_apply_kernel_call(
+        xf, tensors, adapter.dims_in, adapter.pairs,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return out[:rows].reshape(*batch, adapter.d_out)
+
+
+def fused_vmem_ok(d_in: int, d_out: int, adapter: QuantaAdapter,
+                  block_rows: int, block_cols: int,
+                  dtype_bytes: int = 2) -> bool:
+    """Does one grid step's working set fit the VMEM budget?"""
+    x_tile = block_rows * d_in * dtype_bytes
+    w_tile = d_in * block_cols * dtype_bytes
+    scratch = block_rows * d_out * 4
+    tensors = sum(t.size for t in adapter.tensors) * dtype_bytes
+    out_tile = block_rows * block_cols * dtype_bytes
+    return x_tile + w_tile + scratch + tensors + out_tile < VMEM_BUDGET_BYTES
+
+
+def quanta_linear_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    adapter: QuantaAdapter,
+    *,
+    block_rows: int = 128,
+    block_cols: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Adapted linear ``x @ w + delta(x)``; fused when VMEM allows, else
+    XLA matmul + fused chain."""
+    interpret = _on_cpu() if interpret is None else interpret
+    d_in, d_out = w.shape
+    if not fused_vmem_ok(d_in, d_out, adapter, block_rows, block_cols):
+        return x @ w + quanta_apply_fused(
+            x, adapter, block_rows=block_rows, interpret=interpret
+        ).astype(x.dtype)
+    xf, batch, rows = _flatten_rows(x, block_rows)
+    tensors = [t.astype(x.dtype) for t in adapter.tensors]
+    out = quanta_linear_kernel_call(
+        xf, w.astype(x.dtype), tensors, adapter.dims_in, adapter.pairs,
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return out[:rows].reshape(*batch, d_out)

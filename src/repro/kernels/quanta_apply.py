@@ -1,0 +1,113 @@
+"""Fused QuanTA tensor-chain Pallas kernel (TPU target).
+
+The paper's Limitations section: *"QuanTA currently requires applying the
+tensors sequentially to the hidden vectors, which may result in
+underutilizing the GPU when the tensors are too small."*  Staged through
+HBM, each two-axis contraction reads and writes the full hidden tile, so
+the chain's arithmetic intensity is only ``~(dm*dn)/2`` FLOPs/byte per
+stage — deeply memory-bound on TPU (ridge point ~240 FLOPs/byte).
+
+This kernel fuses the WHOLE chain over one VMEM-resident tile:
+
+* grid over row-blocks of the flattened ``(rows, d)`` activations,
+* the ``(block_rows, d)`` tile is loaded once, all N_T contractions run
+  in-VMEM, one ``(block_rows, d_out)`` tile is written back,
+* each contraction is reshaped to ``(block_rows * d/(dm*dn), dm*dn) @
+  (dm*dn, om*on)`` — a well-shaped MXU GEMM (the paper's 16-8-8-x schemes
+  give 64/128-wide contraction dims, i.e. half/full MXU tiles),
+* accumulation in fp32 (``preferred_element_type``), cast on store.
+
+HBM traffic drops from ``(N_T+1) * rows * d`` reads + ``N_T * rows * d``
+writes to ``rows * d`` reads + ``rows * d_out`` writes — a ``~N_T x``
+traffic reduction (napkin math + measured ratios in EXPERIMENTS.md §Perf).
+
+Weights (the small QuanTA tensors, <= a few hundred KB total) are passed
+as full-array VMEM operands.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quanta_apply_kernel_call"]
+
+
+def _chain_block(
+    h: jnp.ndarray,                      # (Br, d_in) VMEM values
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Tuple[int, ...],
+    pairs: Sequence[Tuple[int, int]],
+) -> jnp.ndarray:
+    """The in-register chain; shared by kernel body and (tested) directly."""
+    br = h.shape[0]
+    cur = list(dims_in)
+    h = h.reshape(br, *cur)
+    for t, (m, n) in zip(tensors, pairs):
+        om, on, im, in_ = t.shape
+        h = jnp.moveaxis(h, (1 + m, 1 + n), (-2, -1))
+        lead = h.shape[:-2]
+        h2 = h.reshape(-1, im * in_)
+        acc = jax.lax.dot_general(
+            h2, t.reshape(om * on, im * in_).T,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        h = acc.astype(h.dtype).reshape(*lead, om, on)
+        h = jnp.moveaxis(h, (-2, -1), (1 + m, 1 + n))
+        cur[m], cur[n] = om, on
+    return h.reshape(br, -1)
+
+
+def _kernel(x_ref, *refs, dims_in, pairs, n_tensors):
+    tensors = [refs[i][...] for i in range(n_tensors)]
+    o_ref = refs[n_tensors]
+    o_ref[...] = _chain_block(x_ref[...], tensors, dims_in, pairs).astype(
+        o_ref.dtype
+    )
+
+
+def quanta_apply_kernel_call(
+    x: jnp.ndarray,                       # (rows, d_in)
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Tuple[int, ...],
+    pairs: Sequence[Tuple[int, int]],
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call over row blocks.  ``rows % block_rows == 0``."""
+    rows, d_in = x.shape
+    d_out = d_in
+    cur = list(dims_in)
+    for t, (m, n) in zip(tensors, pairs):
+        cur[m], cur[n] = t.shape[0], t.shape[1]
+    d_out = math.prod(cur)
+    if rows % block_rows:
+        raise ValueError(f"rows {rows} % block_rows {block_rows} != 0")
+    grid = (rows // block_rows,)
+
+    in_specs = [
+        pl.BlockSpec((block_rows, d_in), lambda i: (i, 0)),
+    ] + [
+        pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim) for t in tensors
+    ]
+    out_spec = pl.BlockSpec((block_rows, d_out), lambda i: (i, 0))
+
+    kernel = functools.partial(
+        _kernel, dims_in=tuple(dims_in), pairs=tuple(pairs),
+        n_tensors=len(tensors),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), x.dtype),
+        interpret=interpret,
+    )(x, *tensors)

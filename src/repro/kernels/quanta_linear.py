@@ -1,0 +1,100 @@
+"""Fused adapted-linear Pallas kernel: ``y = x @ W0' + QuanTA_chain(x)``.
+
+During fine-tuning the hot op of every adapted layer reads ``x`` twice
+(once for the frozen base matmul, once for the adapter chain).  For
+layers whose weight tile fits VMEM alongside the activation tile, this
+kernel computes both contributions over a single VMEM-resident ``x`` tile:
+
+* grid over row-blocks; ``x (Br, d_in)``, ``W`` column-tiled to
+  ``(d_in, Bc)``; the chain runs once per row-block (on the first column
+  step) into a VMEM scratch accumulator, then each column step adds its
+  slice — so chain FLOPs are NOT duplicated across column tiles,
+* base matmul accumulates fp32 on the MXU.
+
+For weights too large for VMEM column tiles the wrapper
+(``repro.kernels.ops``) falls back to XLA's native matmul + the fused
+chain kernel — the right trade-off since the base GEMM is already
+MXU-bound there and fusion would only save one activation read.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quanta_apply import _chain_block
+
+__all__ = ["quanta_linear_kernel_call"]
+
+
+def _kernel(x_ref, w_ref, *refs, dims_in, pairs, n_tensors, n_col_blocks):
+    tensors = [refs[i][...] for i in range(n_tensors)]
+    o_ref = refs[n_tensors]
+    delta_ref = refs[n_tensors + 1]   # VMEM scratch (Br, d_out)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _compute_chain():
+        delta_ref[...] = _chain_block(
+            x_ref[...], tensors, dims_in, pairs
+        ).astype(delta_ref.dtype)
+
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    bc = w_ref.shape[1]
+    sl = pl.dslice(j * bc, bc)
+    o_ref[...] = (acc + delta_ref[:, sl]).astype(o_ref.dtype)
+
+
+def quanta_linear_kernel_call(
+    x: jnp.ndarray,                       # (rows, d_in)
+    w: jnp.ndarray,                       # (d_in, d_out)
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Tuple[int, ...],
+    pairs: Sequence[Tuple[int, int]],
+    *,
+    block_rows: int = 256,
+    block_cols: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    rows, d_in = x.shape
+    d_out = w.shape[1]
+    cur = list(dims_in)
+    for t, (m, n) in zip(tensors, pairs):
+        cur[m], cur[n] = t.shape[0], t.shape[1]
+    if math.prod(cur) != d_out:
+        raise ValueError("chain output dim != w.shape[1]")
+    block_cols = min(block_cols, d_out)
+    if rows % block_rows or d_out % block_cols:
+        raise ValueError("rows/cols not divisible by block sizes")
+    grid = (rows // block_rows, d_out // block_cols)
+
+    in_specs = [
+        pl.BlockSpec((block_rows, d_in), lambda i, j: (i, 0)),
+        pl.BlockSpec((d_in, block_cols), lambda i, j: (0, j)),
+    ] + [
+        pl.BlockSpec(t.shape, lambda i, j: (0,) * t.ndim) for t in tensors
+    ]
+    out_spec = pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+
+    kernel = functools.partial(
+        _kernel, dims_in=tuple(dims_in), pairs=tuple(pairs),
+        n_tensors=len(tensors), n_col_blocks=d_out // block_cols,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_rows, d_out), jnp.float32)],
+        interpret=interpret,
+    )(x, w, *tensors)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref.py` contract).
+
+Written independently of the kernel implementations (einsum-based), so a
+kernel bug cannot hide in shared code.  ``repro.core.quanta`` has its own
+sequential-matmul path; the tests cross-check all three.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["quanta_apply_ref", "quanta_linear_ref"]
+
+
+def quanta_apply_ref(
+    x: jnp.ndarray,
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Tuple[int, ...],
+    pairs: Sequence[Tuple[int, int]],
+) -> jnp.ndarray:
+    """Apply the QuanTA chain via per-tensor einsum contractions."""
+    batch = x.shape[:-1]
+    h = x.reshape(*batch, *dims_in)
+    nb = len(batch)
+    for t, (m, n) in zip(tensors, pairs):
+        om, on, im, in_ = t.shape
+        # build einsum: h[..., a_m .., a_n ..] T[om,on,im,in] -> replace axes
+        n_ax = h.ndim - nb
+        in_sub = [chr(ord("a") + i) for i in range(n_ax)]
+        t_sub = ["Y", "Z", in_sub[m], in_sub[n]]
+        out_sub = list(in_sub)
+        out_sub[m], out_sub[n] = "Y", "Z"
+        expr = (
+            "..." + "".join(in_sub) + "," + "".join(t_sub)
+            + "->..." + "".join(out_sub)
+        )
+        h = jnp.einsum(expr, h, t)
+    return h.reshape(*batch, -1)
+
+
+def quanta_linear_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    tensors: Sequence[jnp.ndarray],
+    dims_in: Tuple[int, ...],
+    pairs: Sequence[Tuple[int, int]],
+) -> jnp.ndarray:
+    """Adapted linear: ``x @ w + chain(x)``."""
+    return x @ w + quanta_apply_ref(x, tensors, dims_in, pairs).astype(x.dtype)

@@ -1,0 +1,16 @@
+"""Launch layer: meshes, sharding rules, step builders, dry-run, trainer.
+
+NOTE: ``repro.launch.dryrun`` sets ``XLA_FLAGS`` at import time and must
+only be imported in a dedicated process; it is deliberately NOT imported
+here.
+"""
+
+from repro.launch.mesh import dp_axes, make_host_mesh, make_production_mesh
+from repro.launch.shardings import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    replicated,
+    state_shardings,
+)
+from repro.launch.steps import CellPrograms, build_programs, build_state_specs

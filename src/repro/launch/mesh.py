@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* first
+jax init, while smoke tests and benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "dp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """TPU v5e: one pod = 16x16 = 256 chips; multi-pod = 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh: ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,227 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell — all in seconds, per step:
+
+    compute    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_accessed   / (chips * HBM_BW)
+    collective = collective_bytes     / (chips * LINK_BW)
+
+``cost_analysis()`` supplies FLOPs / bytes for the whole (sharded) program;
+collective bytes are NOT in cost_analysis, so we parse the post-SPMD HLO
+(``compiled.as_text()``) and sum the result-shape bytes of every
+``all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute`` op (per-device bytes; the per-chip divide in the
+formula then cancels — see EXPERIMENTS.md §Roofline for the convention).
+
+MODEL_FLOPS uses the standard 6*N*D (dense) / 6*N_active*D (MoE) training
+estimate plus the attention-context term, so the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute, masked-triangle waste, and
+capacity-factor overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Dict, Optional
+
+from repro.models.common import ModelConfig, ShapeConfig
+from repro.models.transformer import padded_vocab
+
+__all__ = [
+    "HW",
+    "parse_collective_bytes",
+    "roofline_terms",
+    "model_flops",
+    "active_param_count",
+]
+
+# TPU v5e per chip
+HW = dict(
+    peak_flops=197e12,    # bf16
+    hbm_bw=819e9,         # bytes/s
+    link_bw=50e9,         # bytes/s per ICI link
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind, from post-SPMD HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped or "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("= ")
+        kind = None
+        for c in _COLLECTIVES:
+            # op name directly after the result shape, e.g.
+            # "%ag = bf16[2,64]{1,0} all-gather(...)"
+            if re.search(rf"\}}?\s{c}(-start|-done)?\(", rhs) or rhs.startswith(c):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if kind == "collective-permute" and "-done(" in rhs:
+            continue  # result of -done duplicates the -start shape
+        # result shapes live between "= " and the op name
+        head = rhs.split(kind)[0]
+        for dtype, dims in _SHAPE_RE.findall(head):
+            out[kind] += _shape_bytes(dtype, dims)
+    return out
+
+
+def active_param_count(cfg: ModelConfig) -> Dict[str, float]:
+    """Analytic parameter counts (total and active-per-token)."""
+    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    vpad = padded_vocab(cfg.vocab_size)
+    embed = vpad * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.frontend == "audio_tokens":
+        embed = vpad * d  # LM head only; frontend stubbed
+
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * d
+        h = di // cfg.ssm_head_dim
+        per_layer = (
+            d * di * 2                       # z, x proj
+            + d * (2 * cfg.ssm_state)        # B, C proj
+            + d * h + h * 3                  # dt proj + dt_bias/a/d
+            + cfg.conv_kernel * (di + 2 * cfg.ssm_state)
+            + di * d + di + d                # out_proj + norms
+        )
+        total = l * per_layer + embed
+        return {"total": total, "active": total}
+
+    if cfg.family == "hybrid":
+        dr = cfg.lru_width or d
+        rec = d * dr * 2 + cfg.conv_kernel * dr + 2 * dr * dr + dr + dr * d
+        mlp = 3 * d * ff
+        attn = d * cfg.attn_dim + 2 * d * cfg.kv_dim + cfg.attn_dim * d
+        n_macro = l // cfg.attn_period
+        n_tail = l - n_macro * cfg.attn_period
+        total = (
+            n_macro * (2 * rec + attn + 3 * mlp)
+            + n_tail * (rec + mlp)
+            + embed
+        )
+        return {"total": total, "active": total}
+
+    attn = d * cfg.attn_dim + 2 * d * cfg.kv_dim + cfg.attn_dim * d
+    if cfg.is_moe:
+        expert = 3 * d * ff
+        router = d * cfg.n_experts
+        total = l * (attn + router + cfg.n_experts * expert) + embed
+        active = l * (attn + router + cfg.top_k * expert) + embed
+        return {"total": total, "active": active}
+    total = l * (attn + 3 * d * ff) + embed
+    return {"total": total, "active": total}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful model FLOPs per step (6ND train / 2ND inference +
+    attention-context term)."""
+    counts = active_param_count(cfg)
+    vpad = padded_vocab(cfg.vocab_size)
+    n_active_body = counts["active"] - vpad * cfg.d_model * (
+        1 if cfg.tie_embeddings or cfg.frontend == "audio_tokens" else 2
+    )
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        tokens = b  # one token per sequence
+        mult = 2.0
+        s_kv = min(s, cfg.local_window) if cfg.family == "hybrid" else s
+    else:
+        tokens = b * s
+        mult = 6.0 if shape.kind == "train" else 2.0
+        s_kv = s / 2  # causal average context
+        if cfg.sliding_window:
+            s_kv = min(s_kv, cfg.sliding_window)
+        if cfg.family == "hybrid":
+            s_kv = min(s_kv, cfg.local_window)
+
+    body = mult * n_active_body * tokens
+    head = mult * cfg.d_model * vpad * (
+        tokens if shape.kind == "train" else b
+    )
+    # attention context flops: 2*H*hd*s_kv (QK^T) + 2*H*hd*s_kv (PV) per tok
+    if cfg.family == "ssm":
+        attn_ctx = 0.0
+    else:
+        n_attn_layers = (
+            cfg.n_layers // cfg.attn_period if cfg.family == "hybrid"
+            else cfg.n_layers
+        )
+        attn_ctx = (
+            mult / 2 * 4 * cfg.n_heads * cfg.head_dim * s_kv
+            * tokens * n_attn_layers
+        )
+    return body + head + attn_ctx
+
+
+def roofline_terms(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    n_chips: int,
+    cost: Dict[str, float],
+    collective_bytes: Dict[str, int],
+) -> Dict[str, Any]:
+    # The post-SPMD HLO (and hence the parsed cost) is the PER-DEVICE
+    # program: global = per_device * chips.  Writing the spec's formulas
+    # term = global / (chips * rate), the chips cancel — every term below
+    # is per-device work / per-chip rate.
+    hlo_flops_dev = float(cost.get("flops", 0.0))
+    hlo_bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_per_device = float(sum(collective_bytes.values()))
+    t_compute = hlo_flops_dev / HW["peak_flops"]
+    t_memory = hlo_bytes_dev / HW["hbm_bw"]
+    t_collective = coll_per_device / HW["link_bw"]
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = hlo_flops_dev * n_chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_per_device": hlo_flops_dev,
+        "hlo_flops": hlo_flops_global,
+        "hlo_bytes_per_device": hlo_bytes_dev,
+        "hlo_bytes": hlo_bytes_dev * n_chips,
+        "collective_bytes_per_device": coll_per_device,
+        "collective_breakdown": collective_bytes,
+        "model_flops": mf,
+        "useful_flop_ratio": (
+            mf / hlo_flops_global if hlo_flops_global else None
+        ),
+        "step_time_bound_s": max(terms.values()),
+        "mfu_bound": (
+            mf / (max(terms.values()) * n_chips * HW["peak_flops"])
+            if max(terms.values()) > 0 else None
+        ),
+    }

@@ -1,0 +1,206 @@
+"""Sharding rules: parameter, adapter, batch, and cache placement.
+
+Strategy (DESIGN.md §5):
+
+* **TP over `model`** — Megatron-style: column-parallel in-projections
+  (q/k/v, gate/up, SSM in-proj, LRU branch projections), row-parallel
+  out-projections (o_proj, down_proj, SSM/LRU out_proj), vocab-sharded
+  embedding + LM head.
+* **DP over `(pod, data)`** — batch dims; PEFT adapters + norms replicated.
+* **EP** — MoE expert stacks shard the expert axis over `model` when
+  ``E % model == 0`` (llama4), else each expert's ``d_ff`` shards over
+  `model` (mixtral).
+* **FSDP over `data`** — when ``cfg.fsdp``: expert stacks additionally
+  shard ``d_ff`` over `data` (ZeRO-3; GSPMD inserts the per-layer
+  all-gathers).
+* **KV caches** — KV-head axis shards over `model` when divisible, else
+  the head_dim axis (GQA head counts like 10 or 8 don't divide 16; the
+  head_dim=128 always does).  Batch shards over DP only when divisible
+  (long_500k has B=1 -> replicated).
+
+All rules are (regex over leaf path) -> PartitionSpec templates applied to
+the TRAILING dims, so the same rule covers scan-stacked ``(L, ...)`` and
+unstacked weights.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.peft import flatten_paths
+from repro.launch.mesh import dp_axes
+from repro.models.common import ModelConfig
+
+__all__ = [
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+    "state_shardings",
+]
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda _: _ns(mesh, P()), tree)
+
+
+# rules: (path regex, trailing spec). First match wins.  `model`-divisibility
+# is verified at application time; non-divisible dims fall back to None.
+_COL = ("q_proj", "k_proj", "v_proj", "gate_proj", "up_proj", "rec_proj",
+        "z_proj", "x_proj", "bc_proj", "dt_proj", "w_a", "w_x")
+_ROW = ("o_proj", "down_proj", "out_proj")
+
+
+def _rules(cfg: ModelConfig, decode: bool = False):
+    expert_parallel = cfg.is_moe and cfg.n_experts % 16 == 0
+    rules = []
+    if decode:
+        # §Perf hillclimb (minicpm decode_32k): a vocab-sharded embedding
+        # table turns every token-gather into an all-gather of the TABLE
+        # (2.3 GiB/step observed).  Serving shards the table on d_model
+        # instead: gathers are local, only the (B, 1, d/16) activation is
+        # gathered — the training-time vocab sharding stays (the fused CE
+        # needs vocab-sharded logits).
+        rules.append((r".*embed/tokens$", (None, "model")))
+    if cfg.is_moe:
+        if expert_parallel:
+            ff_spec = "data" if cfg.fsdp else None
+            rules += [
+                (r".*/moe/(gate_proj|up_proj)$", ("model", None, ff_spec)),
+                (r".*/moe/down_proj$", ("model", ff_spec, None)),
+                (r".*/moe/router$", (None, "model")),
+            ]
+        else:
+            rules += [
+                (r".*/moe/(gate_proj|up_proj)$", (None, None, "model")),
+                (r".*/moe/down_proj$", (None, "model", None)),
+                (r".*/moe/router$", (None, None)),
+            ]
+    rules += [
+        (r".*/(%s)$" % "|".join(_COL), (None, "model")),
+        (r".*/(%s)$" % "|".join(_ROW), ("model", None)),
+        (r".*/(q_bias|k_bias|v_bias)$", ("model",)),
+        (r".*embed/tokens$", ("model", None)),
+        (r".*lm_head$", (None, "model")),
+        (r".*/conv_w$", (None, "model")),
+        (r".*/conv_b$", ("model",)),
+    ]
+    return rules
+
+
+def _apply_trailing(
+    mesh: Mesh, shape: Tuple[int, ...], trailing: Tuple[Optional[str], ...]
+) -> NamedSharding:
+    """Build a spec: leading dims None, trailing dims per template, with
+    divisibility checks (non-divisible -> None)."""
+    spec: list = [None] * len(shape)
+    k = len(trailing)
+    if k > len(shape):
+        trailing = trailing[k - len(shape):]
+        k = len(trailing)
+    axis_sizes = dict(mesh.shape)
+    for i, ax in enumerate(trailing):
+        dim = len(shape) - k + i
+        if ax is None:
+            continue
+        if shape[dim] % axis_sizes.get(ax, 1) == 0:
+            spec[dim] = ax
+    return _ns(mesh, P(*spec))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree: Any,
+                    decode: bool = False) -> Any:
+    """NamedSharding tree matching ``params_tree`` (specs or arrays)."""
+    rules = _rules(cfg, decode=decode)
+
+    def assign(path_elems, leaf) -> NamedSharding:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_elems
+        )
+        for pattern, trailing in rules:
+            if re.fullmatch(pattern, path):
+                return _apply_trailing(mesh, leaf.shape, trailing)
+        return _ns(mesh, P())  # norms, scalars, small vectors: replicate
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any) -> Any:
+    """Shard the batch dim over DP axes (when divisible)."""
+    dp = dp_axes(mesh)
+    dp_size = math.prod(
+        dict(mesh.shape)[a] for a in dp
+    )
+
+    def assign(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dp_size != 0:
+            return _ns(mesh, P())
+        return _ns(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(assign, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
+                    seq_shard: bool = False) -> Any:
+    """Decode caches: batch over DP; KV-heads or head_dim over model.
+
+    ``seq_shard`` (§Perf hillclimb, flash-decoding-style split-S): shard
+    the KV cache's SEQUENCE dim over `model` instead of head_dim — the
+    per-step collective becomes an fp32 score-row gather instead of a
+    bf16 gather of the cache itself (GQA head counts like 36 don't divide
+    16, so hd-sharding otherwise forces GSPMD to regather K/V)."""
+    dp = dp_axes(mesh)
+    axis_sizes = dict(mesh.shape)
+    dp_size = math.prod(axis_sizes[a] for a in dp)
+    model_size = axis_sizes.get("model", 1)
+
+    def assign(path_elems, leaf):
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_elems
+        )
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        # batch dim: caches are (L, B, ...) except tail_* / len which are (B, ...)
+        b_dim = 0 if (path.startswith("tail_") or path == "len") else 1
+        if len(shape) > b_dim and shape[b_dim] % dp_size == 0 and dp:
+            spec[b_dim] = dp
+        if seq_shard and path in ("k", "v") and len(shape) == 5 and \
+                shape[2] % model_size == 0:
+            spec[2] = "model"            # (L, B, S, KV, hd): split S
+            return _ns(mesh, P(*spec))
+        # last-two dims heuristic: (.., KV, hd) / (.., W, dr) / (.., hs, hd)
+        for dim in range(len(shape) - 1, b_dim, -1):
+            if spec[dim] is None and shape[dim] % model_size == 0 and \
+                    shape[dim] >= model_size and path not in ("len",) and \
+                    "pos" not in path:
+                spec[dim] = "model"
+                break
+        return _ns(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state_tree: Any,
+                    decode: bool = False) -> Any:
+    """TrainState shardings: base params per rules, everything else
+    (adapters, optimizer moments, ef state, step) replicated — PEFT state
+    is tiny by construction (paper §6)."""
+    from repro.train.loop import TrainState
+
+    return TrainState(
+        params=param_shardings(cfg, mesh, state_tree.params, decode=decode),
+        peft=replicated(mesh, state_tree.peft),
+        opt_state=replicated(mesh, state_tree.opt_state),
+        ef_state=replicated(mesh, state_tree.ef_state),
+        step=_ns(mesh, P()),
+    )

@@ -1,0 +1,100 @@
+"""Step-function factory shared by the launcher, dry-run, and tests.
+
+Builds the three lowered entry points per (arch x shape) cell:
+
+* ``train_step``  — full fine-tuning step (fwd + bwd wrt adapters + AdamW),
+  microbatched per the shape config,
+* ``prefill_step``— full-sequence forward that fills the cache and returns
+  ONLY the last-position logits (materializing (B, 32k, V) logits would be
+  a ~200 GB mistake at prefill_32k),
+* ``decode_step`` — one-token step against the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.peft import PeftConfig, attach
+from repro.models.api import build_model, input_specs
+from repro.models.common import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import linear_warmup_schedule
+from repro.train.loop import TrainState, make_train_step
+
+__all__ = ["CellPrograms", "build_programs", "build_state_specs"]
+
+
+def default_optimizer() -> AdamW:
+    # Paper Tables E.2-E.4: AdamW + linear schedule, lr 1e-4, wd 0.
+    return AdamW(lr=linear_warmup_schedule(1e-4, total_steps=1000,
+                                           warmup_steps=30))
+
+
+def build_state_specs(
+    cfg: ModelConfig, peft_cfg: PeftConfig, optimizer: Optional[AdamW] = None
+):
+    """ShapeDtypeStruct TrainState via eval_shape (zero allocation)."""
+    model = build_model(cfg)
+    opt = optimizer or default_optimizer()
+
+    def build():
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        base, peft = attach(key, params, peft_cfg)
+        return TrainState.create(base, peft, opt)
+
+    return jax.eval_shape(build)
+
+
+@dataclasses.dataclass
+class CellPrograms:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    model: Any
+    optimizer: AdamW
+    step_fn: Callable
+    batch_specs: Dict[str, jax.ShapeDtypeStruct]
+    kind: str
+
+    def state_specs(self, peft_cfg: PeftConfig):
+        return build_state_specs(self.cfg, peft_cfg, self.optimizer)
+
+    def cache_specs(self):
+        return jax.eval_shape(
+            lambda: self.model.init_cache(
+                self.shape.global_batch, self.shape.seq_len
+            )
+        )
+
+
+def build_programs(
+    cfg: ModelConfig, shape: ShapeConfig,
+    dp_axes: Optional[Tuple[str, ...]] = ("pod", "data"),
+) -> CellPrograms:
+    model = build_model(cfg)
+    optimizer = default_optimizer()
+
+    if shape.kind == "train":
+        microbatches = max(shape.microbatches, cfg.train_microbatches)
+        step = make_train_step(
+            model, optimizer, microbatches=microbatches,
+            dp_axes=dp_axes,
+        )
+    elif shape.kind == "prefill":
+        def step(params, peft, batch):  # noqa: ANN001
+            logits, cache = model.prefill(params, peft, batch)
+            return logits[:, -1:], cache
+    elif shape.kind == "decode":
+        def step(params, peft, cache, batch):  # noqa: ANN001
+            return model.decode_step(params, peft, cache, batch)
+    else:
+        raise ValueError(f"unknown shape kind {shape.kind}")
+
+    return CellPrograms(
+        cfg=cfg, shape=shape, model=model, optimizer=optimizer, step_fn=step,
+        batch_specs=input_specs(cfg, shape), kind=shape.kind,
+    )

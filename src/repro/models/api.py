@@ -1,0 +1,86 @@
+"""Model registry + uniform step/spec API used by launcher, dry-run, tests.
+
+``build_model(cfg)`` returns one of the model classes, all exposing:
+``init``, ``forward``, ``loss``, ``init_cache``, ``prefill``, ``decode_step``.
+
+``input_specs(cfg, shape)`` builds ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of a given (arch x shape) cell — weak-type-correct,
+shardable, zero allocation — which is what the multi-pod dry-run lowers
+against.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShapeConfig
+from repro.models.griffin import Griffin
+from repro.models.mamba2 import Mamba2
+from repro.models.transformer import Transformer
+
+__all__ = ["build_model", "input_specs", "cache_specs", "param_specs"]
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return Mamba2(cfg)
+    if cfg.family == "hybrid":
+        return Griffin(cfg)
+    return Transformer(cfg)
+
+
+def _tok(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the step function's ``batch`` arg."""
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.bfloat16 if cfg.compute_dtype == jnp.bfloat16 else cfg.compute_dtype
+
+    if shape.kind == "decode":
+        if cfg.frontend == "audio_tokens":
+            return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), act)}
+        return {"tokens": _tok((b, 1))}
+
+    if cfg.frontend == "audio_tokens":
+        batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), act)}
+        if shape.kind == "train":
+            batch["labels"] = _tok((b, s))
+        return batch
+
+    if cfg.frontend == "vision_embeds":
+        p = cfg.n_patches
+        if s <= p:
+            raise ValueError(f"seq {s} must exceed n_patches {p}")
+        batch = {
+            "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), act),
+            "tokens": _tok((b, s - p)),
+        }
+        if shape.kind == "train":
+            batch["labels"] = _tok((b, s))
+        return batch
+
+    batch = {"tokens": _tok((b, s))}
+    if shape.kind == "train":
+        batch["labels"] = _tok((b, s))
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStructs via ``eval_shape`` (no allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    model = build_model(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(model.init, key)

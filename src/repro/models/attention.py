@@ -1,0 +1,135 @@
+"""Attention: blockwise-causal (flash-style, pure JAX) + decode paths.
+
+The training/prefill path never materializes the full ``(S, S)`` score
+matrix: queries are processed in blocks of ``q_block`` via ``lax.scan``, so
+peak memory is ``B * H * q_block * S_kv`` — the structural property that
+lets the 32k-prefill shapes fit HBM in the dry-run.  A Pallas flash kernel
+that additionally skips fully-masked KV blocks is a recorded §Perf
+hillclimb; this reference path computes the full row per query block and
+masks (the compiled FLOPs therefore include the masked upper triangle —
+accounted for in the roofline's MODEL_FLOPS/HLO_FLOPs ratio).
+
+GQA layout: ``q (B, S, H, hd)``, ``k/v (B, S, KV, hd)`` with ``H % KV == 0``;
+queries are grouped as ``(B, S, KV, G, hd)`` so no KV duplication happens.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["blockwise_causal_attention", "decode_attention"]
+
+
+def _block_attend(
+    q: jnp.ndarray,          # (B, Bq, KV, G, hd)
+    k: jnp.ndarray,          # (B, S, KV, hd)
+    v: jnp.ndarray,          # (B, S, KV, hd)
+    q_pos: jnp.ndarray,      # (Bq,) absolute positions of this query block
+    kv_pos: jnp.ndarray,     # (S,)  absolute positions of keys
+    kv_len: Optional[jnp.ndarray],  # (B,) valid kv length (decode) or None
+    window: Optional[int],
+    softmax_scale: float,
+    fast_softmax: bool = False,
+) -> jnp.ndarray:
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * softmax_scale                                   # (B, KV, G, Bq, S)
+    causal = q_pos[:, None] >= kv_pos[None, :]           # (Bq, S)
+    if window is not None:
+        causal &= q_pos[:, None] - kv_pos[None, :] < window
+    mask = causal[None, None, None]
+    if kv_len is not None:
+        valid = kv_pos[None, :] < kv_len[:, None]        # (B, S)
+        mask = mask & valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    if fast_softmax:
+        # §Perf hillclimb: fp32 row statistics, bf16 exp/probs tensor —
+        # halves the dominant score-tensor traffic vs fp32 softmax.
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp((scores - m)).astype(v.dtype)
+        denom = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        probs = (e / denom.astype(v.dtype))
+    else:
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)     # (B, Bq, KV, G, hd)
+
+
+def blockwise_causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_block: int = 512,
+    window: Optional[int] = None,
+    pos_offset: int = 0,
+    fast_softmax: bool = False,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, O(q_block * S) memory.
+
+    Returns ``(B, S, H, hd)``.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    if h % kv:
+        raise ValueError(f"n_heads {h} must be a multiple of n_kv_heads {kv}")
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, s, kv, g, hd)
+    kv_pos = pos_offset + jnp.arange(s)
+
+    q_block = min(q_block, s)
+    while s % q_block:           # largest divisor of s not exceeding q_block
+        q_block -= 1
+    n_blocks = s // q_block
+
+    if n_blocks == 1:
+        out = _block_attend(qg, k, v, kv_pos, kv_pos, None, window, scale,
+                            fast_softmax)
+        return out.reshape(b, s, h, hd)
+
+    qb = qg.reshape(b, n_blocks, q_block, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    pos_b = kv_pos.reshape(n_blocks, q_block)
+
+    def body(_, inputs):
+        q_i, pos_i = inputs
+        out_i = _block_attend(q_i, k, v, pos_i, kv_pos, None, window, scale,
+                              fast_softmax)
+        return None, out_i
+
+    _, out = jax.lax.scan(body, None, (qb, pos_b))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,           # (B, 1, H, hd) — one new token
+    k_cache: jnp.ndarray,     # (B, S_max, KV, hd)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,   # (B,) number of valid entries (incl. new token)
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-step attention over a KV cache.  Returns ``(B, 1, H, hd)``."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, 1, kv, g, hd)
+    s_max = k_cache.shape[1]
+    kv_pos = jnp.arange(s_max)
+    q_pos = cache_len - 1                                 # (B,)
+
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                             # (B, KV, G, 1, S)
+    valid = kv_pos[None, :] < cache_len[:, None]          # (B, S)
+    if window is not None:
+        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
+    return out.reshape(b, 1, h, hd)

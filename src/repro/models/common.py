@@ -1,0 +1,253 @@
+"""Shared model-building blocks: config, norms, RoPE, losses, init helpers.
+
+All models in this package follow the same conventions:
+
+* parameters are nested dicts of raw ``jnp.ndarray``s (no framework),
+* adaptable linears are 2-D ``(d_in, d_out)`` (or ``(L, d_in, d_out)`` when
+  scan-stacked) so the PEFT layer (``repro.core.peft``) can target them,
+* activations are row vectors (``y = x @ W``),
+* compute dtype and parameter dtype are independently configurable
+  (bf16 params / bf16 compute for the dry-run, f32 / f32 for CPU tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "rms_norm",
+    "make_rope",
+    "apply_rope",
+    "cross_entropy_loss",
+    "dense_init",
+    "embed_init",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters.  One instance per assigned arch
+    (see ``repro/configs``)."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None   # None = full attention
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    # hybrid (RG-LRU / Griffin)
+    lru_width: int = 0
+    attn_period: int = 3            # 1 attention layer per `period` layers
+    local_window: int = 2048
+    # modality frontend stubs
+    frontend: Optional[str] = None   # None | "audio_tokens" | "vision_embeds"
+    n_codebooks: int = 1             # audio (EnCodec streams)
+    n_patches: int = 0               # vlm: image patch count per example
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # attention blocking (pure-JAX flash-style)
+    q_block: int = 512
+    # §Perf hillclimb knob: keep attention probabilities in bf16 after an
+    # fp32 row-max/denominator (halves score-tensor HBM traffic; the row
+    # statistics stay fp32 so logsumexp accuracy is preserved)
+    fast_softmax: bool = False
+    # remat policy for train_step
+    remat: bool = True
+    # FSDP: additionally shard big weight stacks over the data axis
+    # (ZeRO-3-style); required when 16-way TP alone cannot fit the weights
+    # (llama4-maverick: 400B params / 256 chips).
+    fsdp: bool = False
+    # MoE dispatch locality: number of token groups (launcher sets this to
+    # the DP shard count so dispatch sorts/gathers stay device-local), and
+    # the mesh axes to pin the group dim to (None outside a mesh).
+    moe_groups: int = 1
+    dp_axes: Optional[tuple] = None
+    # per-arch gradient-accumulation override for train_4k (0 = use the
+    # shape default).  phi3/llama4 need 16 to fit 16 GiB HBM (§Perf A4/A6).
+    train_microbatches: int = 0
+    # §Perf hillclimb D: Megatron-style sequence parallelism — constrain
+    # the residual stream to P(dp, 'model', None) between blocks so GSPMD
+    # emits reduce-scatter + all-gather pairs instead of full all-reduces
+    # (halves boundary-collective bytes; needs dp_axes set).
+    seq_parallel_residual: bool = False
+    # QuanTA scheme for square targets (paper notation, e.g. "16-8-8-4")
+    quanta_scheme: Optional[str] = None
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: the assigned seq_len x global_batch points."""
+
+    name: str                         # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+    microbatches: int = 1             # gradient-accumulation steps (train only)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with fp32 accumulation (LLaMA convention: weight = 1 + scale)."""
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_rope(
+    positions: jnp.ndarray, head_dim: int, theta: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rotary embedding tables for integer ``positions (...,)`` ->
+    ``cos/sin (..., head_dim//2)`` in fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(
+    x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+) -> jnp.ndarray:
+    """Apply rotary embedding.  ``x (B, S, H, hd)``, tables ``(B, S, hd//2)``
+    (or broadcastable).  Pairs are (x[..., :half], x[..., half:])."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x1.dtype)
+    s = sin[..., None, :].astype(x1.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Token-mean cross entropy in fp32.  ``labels`` of -100 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        valid = valid & (mask > 0)
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def fused_cross_entropy(
+    x: jnp.ndarray,            # (B, S, d) final hidden states
+    w_head: jnp.ndarray,       # (d, V_padded)
+    labels: jnp.ndarray,       # (B, S); -100 = ignored
+    vocab_size: int,           # true vocab (mask padded columns)
+    n_chunks: int = 8,
+) -> jnp.ndarray:
+    """Sequence-chunked fused LM-head + cross entropy.
+
+    The full ``(B, S, V)`` logits tensor (and its cotangent) is never
+    materialized: the head matmul and the softmax-CE run per sequence chunk
+    under ``jax.checkpoint``, so peak memory is one chunk's logits.  For a
+    150k-vocab model at 4k tokens this removes the single largest tensor of
+    the training step (see EXPERIMENTS.md §Perf, hillclimb #1).
+    """
+    b, s, d = x.shape
+    if s % n_chunks:
+        n_chunks = 1
+    c = s // n_chunks
+    xc = jnp.moveaxis(x.reshape(b, n_chunks, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, c), 1, 0)
+    vpad = w_head.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (vpad,), 0)
+
+    def body(carry, xs):
+        nll_sum, n_valid = carry
+        xi, li = xs
+        logits = xi @ w_head                               # (B, c, V) bf16
+        logits = jnp.where(col < vocab_size, logits,
+                           jnp.finfo(logits.dtype).min)
+        logits = logits.astype(jnp.float32)
+        valid = li >= 0
+        safe = jnp.where(valid, li, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # Vocab-parallel gold-logit extraction (Megatron-style): a masked
+        # reduce instead of take_along_axis, so a vocab-sharded logits
+        # tensor reduces locally + psum — no all-gather of the logits.
+        gold = jnp.sum(
+            jnp.where(col[None, None, :] == safe[..., None], logits, 0.0),
+            axis=-1,
+        )
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (nll_sum + jnp.sum(nll),
+                n_valid + jnp.sum(valid.astype(jnp.int32))), None
+
+    (nll_sum, n_valid), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.float32(0.0), jnp.int32(0)),
+        (xc, lc),
+    )
+    return nll_sum / jnp.maximum(n_valid, 1)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (LLaMA-style)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (
+        jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), jnp.float32)
+        * std
+    ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (
+        jax.random.truncated_normal(key, -3.0, 3.0, (vocab, d), jnp.float32)
+        * 0.02
+    ).astype(dtype)

@@ -1,0 +1,398 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention,
+pattern (recurrent, recurrent, attention) repeating (1 attention per 3).
+
+26 layers = 8 scan-stacked macro-blocks of (rec, rec, local-attn) plus a
+2-layer recurrent tail.  Every temporal-mixing block is followed by a GeGLU
+MLP (Griffin residual pattern).
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t),       c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence recurrence runs as ``jax.lax.associative_scan`` (TPU-native);
+decode keeps an O(1) per-layer state, and the local-attention KV cache is a
+fixed ``window``-sized ring buffer — together these make ``long_500k``
+decoding feasible (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.peft import get_adapter, peft_linear
+from repro.models.attention import blockwise_causal_attention
+from repro.models.common import (
+    ModelConfig,
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    fused_cross_entropy,
+    make_rope,
+    rms_norm,
+)
+from repro.models.transformer import _mask_vocab_pad, get_subtree, padded_vocab
+
+__all__ = ["Griffin"]
+
+_LRU_C = 8.0
+
+
+def _lru_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 via associative scan."""
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+class Griffin:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.d_rnn = cfg.lru_width or cfg.d_model
+        self.n_macro = cfg.n_layers // cfg.attn_period
+        self.n_tail = cfg.n_layers - self.n_macro * cfg.attn_period  # rec tail
+
+    # ------------------------------------------------------------------ init
+    def _rec_params(self, key, dt):
+        cfg = self.cfg
+        d, dr = cfg.d_model, self.d_rnn
+        ks = jax.random.split(key, 8)
+        return {
+            "ln": jnp.ones((d,), dt),
+            "gate_proj": dense_init(ks[0], d, dr, dt),
+            "rec_proj": dense_init(ks[1], d, dr, dt),
+            "conv_w": (
+                jax.random.normal(ks[2], (cfg.conv_kernel, dr))
+                / math.sqrt(cfg.conv_kernel)
+            ).astype(dt),
+            "conv_b": jnp.zeros((dr,), dt),
+            "w_a": dense_init(ks[3], dr, dr, dt),
+            "w_x": dense_init(ks[4], dr, dr, dt),
+            "lambda": (
+                jnp.log(jnp.expm1(jnp.exp(jnp.linspace(
+                    math.log(0.9), math.log(0.999), dr
+                ))))
+            ).astype(dt),  # softplus^-1 of target decay magnitudes
+            "out_proj": dense_init(ks[5], dr, d, dt),
+        }
+
+    def _mlp_params(self, key, dt):
+        cfg = self.cfg
+        d, ff = cfg.d_model, cfg.d_ff
+        ks = jax.random.split(key, 3)
+        return {
+            "ln": jnp.ones((d,), dt),
+            "gate_proj": dense_init(ks[0], d, ff, dt),
+            "up_proj": dense_init(ks[1], d, ff, dt),
+            "down_proj": dense_init(ks[2], ff, d, dt),
+        }
+
+    def _attn_params(self, key, dt):
+        cfg = self.cfg
+        d, ad, kvd = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+        ks = jax.random.split(key, 4)
+        return {
+            "ln": jnp.ones((d,), dt),
+            "q_proj": dense_init(ks[0], d, ad, dt),
+            "k_proj": dense_init(ks[1], d, kvd, dt),
+            "v_proj": dense_init(ks[2], d, kvd, dt),
+            "o_proj": dense_init(ks[3], ad, d, dt),
+        }
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        keys = iter(jax.random.split(key, 32))
+        vpad = padded_vocab(cfg.vocab_size)
+
+        def stack(fn):
+            return jax.vmap(lambda k: fn(k, dt))(
+                jax.random.split(next(keys), self.n_macro)
+            )
+
+        params: Dict[str, Any] = {
+            "embed": {"tokens": embed_init(next(keys), vpad, cfg.d_model, dt)},
+            "blocks": {
+                "rec1": stack(self._rec_params),
+                "mlp1": stack(self._mlp_params),
+                "rec2": stack(self._rec_params),
+                "mlp2": stack(self._mlp_params),
+                "attn": stack(self._attn_params),
+                "mlp3": stack(self._mlp_params),
+            },
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": dense_init(next(keys), cfg.d_model, vpad, dt),
+        }
+        tail: Dict[str, Any] = {}
+        for i in range(self.n_tail):
+            tail[f"rec{i + 1}"] = self._rec_params(next(keys), dt)
+            tail[f"mlp{i + 1}"] = self._mlp_params(next(keys), dt)
+        if tail:
+            params["tail"] = tail
+        return params
+
+    # ------------------------------------------------------------ sub-blocks
+    def _mlp(self, lp, la, x):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        g = peft_linear(h, lp["gate_proj"], get_adapter(la, "gate_proj"))
+        u = peft_linear(h, lp["up_proj"], get_adapter(la, "up_proj"))
+        return x + peft_linear(
+            jax.nn.gelu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
+        )
+
+    def _rec_block(self, lp, la, x, state=None):
+        """Griffin recurrent block.  state = (lru (B, dr), conv (B, K-1, dr))
+        for decode; None for full-sequence (associative scan)."""
+        cfg = self.cfg
+        b, s, _ = x.shape
+        xn = rms_norm(x, lp["ln"], cfg.norm_eps)
+        gate = jax.nn.gelu(
+            peft_linear(xn, lp["gate_proj"], get_adapter(la, "gate_proj"))
+        )
+        u = peft_linear(xn, lp["rec_proj"], get_adapter(la, "rec_proj"))
+
+        k = cfg.conv_kernel
+        if state is None:
+            pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+            u = sum(
+                pad[:, i : i + s, :] * lp["conv_w"][i][None, None, :]
+                for i in range(k)
+            ) + lp["conv_b"][None, None, :]
+        else:
+            lru_state, conv_state = state
+            window = jnp.concatenate([conv_state, u], axis=1)   # (B, K, dr)
+            u = (
+                jnp.einsum("bkc,kc->bc", window, lp["conv_w"]) + lp["conv_b"]
+            )[:, None, :]
+            new_conv = window[:, 1:, :]
+
+        # RG-LRU gates (fp32 recurrence for stability)
+        r = jax.nn.sigmoid((u @ lp["w_a"]).astype(jnp.float32))
+        i = jax.nn.sigmoid((u @ lp["w_x"]).astype(jnp.float32))
+        log_a = -_LRU_C * jax.nn.softplus(
+            lp["lambda"].astype(jnp.float32)
+        ) * r                                                    # (B,S,dr)
+        a = jnp.exp(log_a)
+        gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+            i * u.astype(jnp.float32)
+        )
+
+        if state is None:
+            h = _lru_scan(a, gated_in)                           # (B,S,dr)
+            new_state = None
+        else:
+            h = a[:, 0] * lru_state + gated_in[:, 0]
+            new_state = (h, new_conv)
+            h = h[:, None, :]
+
+        y = (h.astype(x.dtype)) * gate
+        out = peft_linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
+        return x + out, new_state
+
+    def _attn_block(self, lp, la, x, rope, cache=None):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        xn = rms_norm(x, lp["ln"], cfg.norm_eps)
+        q = peft_linear(xn, lp["q_proj"], get_adapter(la, "q_proj"))
+        kk = peft_linear(xn, lp["k_proj"], get_adapter(la, "k_proj"))
+        v = peft_linear(xn, lp["v_proj"], get_adapter(la, "v_proj"))
+        q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        kk = kk.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        kk = apply_rope(kk, cos, sin)
+
+        if cache is None:
+            out = blockwise_causal_attention(
+                q, kk, v, q_block=cfg.q_block, window=cfg.local_window
+            )
+            new_cache = None
+        else:
+            k_ring, v_ring, pos_ring, new_len = cache            # ring buffer
+            w = cfg.local_window
+            slot = (new_len - 1) % w                             # (B,)
+            b_idx = jnp.arange(b)
+            k_ring = k_ring.at[b_idx, slot].set(kk[:, 0])
+            v_ring = v_ring.at[b_idx, slot].set(v[:, 0])
+            pos_ring = pos_ring.at[b_idx, slot].set(new_len - 1)
+            q_pos = (new_len - 1)[:, None]                       # (B,1)
+            scale = 1.0 / math.sqrt(cfg.head_dim)
+            g = cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.head_dim)
+            scores = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qg, k_ring,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            valid = (pos_ring >= 0) & (pos_ring <= q_pos) & (
+                q_pos - pos_ring < w
+            )                                                    # (B,W)
+            scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1).astype(v_ring.dtype)
+            out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_ring).reshape(
+                b, 1, cfg.n_heads, cfg.head_dim
+            )
+            new_cache = (k_ring, v_ring, pos_ring)
+        out = out.reshape(b, s, cfg.attn_dim)
+        out = peft_linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
+        return x + out, new_cache
+
+    # --------------------------------------------------------------- forward
+    def _macro(self, bp, ba, x, rope, caches=None):
+        """One (rec, mlp, rec, mlp, attn, mlp) macro-block."""
+        if caches is None:
+            x, _ = self._rec_block(bp["rec1"], get_subtree(ba, "rec1"), x)
+            x = self._mlp(bp["mlp1"], get_subtree(ba, "mlp1"), x)
+            x, _ = self._rec_block(bp["rec2"], get_subtree(ba, "rec2"), x)
+            x = self._mlp(bp["mlp2"], get_subtree(ba, "mlp2"), x)
+            x, _ = self._attn_block(bp["attn"], get_subtree(ba, "attn"), x, rope)
+            x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
+            return x, None
+        lru1, conv1, lru2, conv2, k_r, v_r, pos_r, new_len = caches
+        x, (lru1, conv1) = self._rec_block(
+            bp["rec1"], get_subtree(ba, "rec1"), x, (lru1, conv1)
+        )
+        x = self._mlp(bp["mlp1"], get_subtree(ba, "mlp1"), x)
+        x, (lru2, conv2) = self._rec_block(
+            bp["rec2"], get_subtree(ba, "rec2"), x, (lru2, conv2)
+        )
+        x = self._mlp(bp["mlp2"], get_subtree(ba, "mlp2"), x)
+        x, (k_r, v_r, pos_r) = self._attn_block(
+            bp["attn"], get_subtree(ba, "attn"), x, rope,
+            cache=(k_r, v_r, pos_r, new_len),
+        )
+        x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
+        return x, (lru1, conv1, lru2, conv2, k_r, v_r, pos_r)
+
+    def _hidden(self, params, batch, peft=None):
+        cfg = self.cfg
+        x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
+        b, s, _ = x.shape
+        rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
+        block_adapters = (peft or {}).get("blocks", {})
+
+        def constrain(x):
+            if cfg.seq_parallel_residual and cfg.dp_axes and \
+                    x.shape[1] % 16 == 0:
+                from jax.sharding import PartitionSpec as P
+                return jax.lax.with_sharding_constraint(
+                    x, P(tuple(cfg.dp_axes), "model", None)
+                )
+            return x
+
+        def body(x, xs):
+            bp, ba = xs
+            x, _ = self._macro(bp, ba, x, rope)
+            return constrain(x), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["blocks"], block_adapters))
+
+        tail_adapters = (peft or {}).get("tail", {})
+        for i in range(self.n_tail):
+            tp = params["tail"]
+            x, _ = self._rec_block(
+                tp[f"rec{i + 1}"], get_subtree(tail_adapters, f"rec{i + 1}"), x
+            )
+            x = self._mlp(
+                tp[f"mlp{i + 1}"], get_subtree(tail_adapters, f"mlp{i + 1}"), x
+            )
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def forward(self, params, batch, peft=None, *, last_only: bool = False):
+        cfg = self.cfg
+        x = self._hidden(params, batch, peft)
+        if last_only:
+            x = x[:, -1:]
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+        return logits, jnp.float32(0.0)
+
+    def loss(self, params, peft, batch):
+        cfg = self.cfg
+        x = self._hidden(params, batch, peft)
+        return fused_cross_entropy(
+            x, params["lm_head"].astype(cfg.compute_dtype),
+            batch["labels"], cfg.vocab_size,
+        )
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or cfg.param_dtype
+        dr, w, km = self.d_rnn, cfg.local_window, cfg.conv_kernel - 1
+        nm = self.n_macro
+        cache = {
+            "lru1": jnp.zeros((nm, batch, dr), jnp.float32),
+            "conv1": jnp.zeros((nm, batch, km, dr), dt),
+            "lru2": jnp.zeros((nm, batch, dr), jnp.float32),
+            "conv2": jnp.zeros((nm, batch, km, dr), dt),
+            "k": jnp.zeros((nm, batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((nm, batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+            "pos": -jnp.ones((nm, batch, w), jnp.int32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+        for i in range(self.n_tail):
+            cache[f"tail_lru{i + 1}"] = jnp.zeros((batch, dr), jnp.float32)
+            cache[f"tail_conv{i + 1}"] = jnp.zeros((batch, km, dr), dt)
+        return cache
+
+    def prefill(self, params, peft, batch):
+        logits, _ = self.forward(params, batch, peft, last_only=True)
+        cache = self.init_cache(batch["tokens"].shape[0],
+                                batch["tokens"].shape[1])
+        return logits, cache
+
+    def decode_step(self, params, peft, cache, batch):
+        cfg = self.cfg
+        x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
+        block_adapters = (peft or {}).get("blocks", {})
+        new_len = cache["len"] + 1
+        rope = make_rope(
+            (new_len - 1)[:, None], cfg.head_dim, cfg.rope_theta
+        )
+
+        def body(x, xs):
+            bp, ba, lru1, conv1, lru2, conv2, k_r, v_r, pos_r = xs
+            x, new = self._macro(
+                bp, ba, x, rope,
+                caches=(lru1, conv1, lru2, conv2, k_r, v_r, pos_r, new_len),
+            )
+            return x, new
+
+        x, outs = jax.lax.scan(
+            body, x,
+            (params["blocks"], block_adapters, cache["lru1"], cache["conv1"],
+             cache["lru2"], cache["conv2"], cache["k"], cache["v"],
+             cache["pos"]),
+        )
+        lru1, conv1, lru2, conv2, k_r, v_r, pos_r = outs
+        new_cache = dict(
+            lru1=lru1, conv1=conv1, lru2=lru2, conv2=conv2,
+            k=k_r, v=v_r, pos=pos_r, len=new_len,
+        )
+        tail_adapters = (peft or {}).get("tail", {})
+        for i in range(self.n_tail):
+            tp = params["tail"]
+            x, (lru_t, conv_t) = self._rec_block(
+                tp[f"rec{i + 1}"], get_subtree(tail_adapters, f"rec{i + 1}"),
+                x, (cache[f"tail_lru{i + 1}"], cache[f"tail_conv{i + 1}"]),
+            )
+            x = self._mlp(
+                tp[f"mlp{i + 1}"], get_subtree(tail_adapters, f"mlp{i + 1}"), x
+            )
+            new_cache[f"tail_lru{i + 1}"] = lru_t
+            new_cache[f"tail_conv{i + 1}"] = conv_t
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+        return _mask_vocab_pad(logits, cfg.vocab_size), new_cache

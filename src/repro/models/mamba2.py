@@ -1,0 +1,328 @@
+"""Mamba-2 (SSD: state-space duality) — attention-free backbone.
+
+Implements the chunked "dual form" for training/prefill (Dao & Gu 2024,
+arXiv:2405.21060, listing `ssd_minimal_discrete`) and the O(1)-state
+recurrent form for decode — which is what makes the ``long_500k`` cell
+feasible where full-attention archs are skipped.
+
+Block layout (Mamba-2):
+    x -> RMSNorm -> {z_proj, x_proj, bc_proj, dt_proj}
+      -> causal conv1d(k=4) over [x;B;C]
+      -> SSD(x*dt, A*dt, B, C) + D*x
+      -> gated RMSNorm(y, silu(z)) -> out_proj -> +residual
+
+PEFT adaptation note (DESIGN.md §Arch-applicability): there is no q/v here;
+QuanTA attaches to ``x_proj``/``z_proj`` (rectangular, d -> 2d) and
+``out_proj`` (2d -> d) — the analogous fine-tuned linears.
+
+The inter-chunk state recurrence uses ``jax.lax.associative_scan`` — the
+TPU-native mapping of the sequential chunk loop.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.peft import get_adapter, peft_linear
+from repro.models.common import (
+    ModelConfig,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    fused_cross_entropy,
+    rms_norm,
+)
+from repro.models.transformer import _mask_vocab_pad, get_subtree, padded_vocab
+
+__all__ = ["Mamba2"]
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]
+    (lower-triangular), -inf above the diagonal."""
+    t = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    ii = jnp.arange(t)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+class Mamba2:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.n_ssm_heads = self.d_inner // cfg.ssm_head_dim
+        self.n_groups = 1
+        self.conv_dim = self.d_inner + 2 * self.n_groups * cfg.ssm_state
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        di, hs = self.d_inner, cfg.ssm_state
+        h = self.n_ssm_heads
+        keys = iter(jax.random.split(key, 16))
+        vpad = padded_vocab(cfg.vocab_size)
+        d = cfg.d_model
+
+        def stack(fn):
+            return jax.vmap(fn)(jax.random.split(next(keys), cfg.n_layers))
+
+        layers = {
+            "z_proj": stack(lambda k: dense_init(k, d, di, dt)),
+            "x_proj": stack(lambda k: dense_init(k, d, di, dt)),
+            "bc_proj": stack(
+                lambda k: dense_init(k, d, 2 * self.n_groups * hs, dt)
+            ),
+            "dt_proj": stack(lambda k: dense_init(k, d, h, dt)),
+            "dt_bias": jnp.broadcast_to(
+                jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, h))), (cfg.n_layers, h)
+            ).astype(dt),
+            "conv_w": stack(
+                lambda k: (
+                    jax.random.normal(k, (cfg.conv_kernel, self.conv_dim))
+                    / math.sqrt(cfg.conv_kernel)
+                ).astype(dt)
+            ),
+            "conv_b": jnp.zeros((cfg.n_layers, self.conv_dim), dt),
+            "a_log": jnp.broadcast_to(
+                jnp.log(jnp.linspace(1.0, 16.0, h)), (cfg.n_layers, h)
+            ).astype(dt),
+            "d_skip": jnp.ones((cfg.n_layers, h), dt),
+            "gate_norm": jnp.ones((cfg.n_layers, di), dt),
+            "out_proj": stack(lambda k: dense_init(k, di, d, dt)),
+            "ln": jnp.ones((cfg.n_layers, d), dt),
+        }
+        return {
+            "embed": {"tokens": embed_init(next(keys), vpad, d, dt)},
+            "layers": layers,
+            "final_norm": jnp.ones((d,), dt),
+            "lm_head": dense_init(next(keys), d, vpad, dt),
+        }
+
+    # ------------------------------------------------------------ projections
+    def _project(self, lp, la, xn):
+        z = peft_linear(xn, lp["z_proj"], get_adapter(la, "z_proj"))
+        xs = peft_linear(xn, lp["x_proj"], get_adapter(la, "x_proj"))
+        bc = xn @ lp["bc_proj"]
+        dt_raw = xn @ lp["dt_proj"] + lp["dt_bias"]
+        return z, xs, bc, dt_raw
+
+    def _conv(self, lp, xbc):
+        """Causal depthwise conv1d, kernel K (train/prefill path)."""
+        k = self.cfg.conv_kernel
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(
+            pad[:, i : i + xbc.shape[1], :] * lp["conv_w"][i][None, None, :]
+            for i in range(k)
+        )
+        return jax.nn.silu(out + lp["conv_b"][None, None, :])
+
+    # ------------------------------------------------------------ SSD (dual)
+    def _ssd_chunked(self, x, dt, a, b_mat, c_mat):
+        """Chunked SSD.  x (B,S,H,hd); dt (B,S,H); a (H,) negative;
+        b/c (B,S,G,hs).  Returns y (B,S,H,hd)."""
+        cfg = self.cfg
+        bsz, s, h, hd = x.shape
+        q = min(cfg.ssm_chunk, s)
+        while s % q:             # largest divisor of s not exceeding chunk
+            q -= 1
+        nc = s // q
+        g = self.n_groups
+        hs = cfg.ssm_state
+
+        da = (dt * a[None, None, :]).astype(jnp.float32)        # (B,S,H) <= 0
+        xdt = x * dt[..., None].astype(x.dtype)
+
+        # reshape into chunks
+        xc = xdt.reshape(bsz, nc, q, h, hd)
+        dac = da.reshape(bsz, nc, q, h)
+        bc = b_mat.reshape(bsz, nc, q, g, hs)
+        cc = c_mat.reshape(bsz, nc, q, g, hs)
+        hg = h // g  # heads per group
+
+        # 1. intra-chunk (diagonal blocks): attention-like with decay kernel
+        l_mat = jnp.exp(_segsum(jnp.moveaxis(dac, -1, -2)))      # (B,nc,H,q,q)
+        scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)        # (B,nc,G,q,q)
+        scores = jnp.repeat(scores, hg, axis=2)                  # (B,nc,H,q,q)
+        y_diag = jnp.einsum(
+            "bchqk,bckhd->bcqhd", (scores * l_mat).astype(x.dtype), xc
+        )
+
+        # 2. chunk-final states
+        dac_cum = jnp.cumsum(dac, axis=2)                        # (B,nc,q,H)
+        decay_to_end = jnp.exp(dac_cum[:, :, -1:, :] - dac_cum)  # (B,nc,q,H)
+        bx = jnp.repeat(bc, hg, axis=3) if g != h else bc
+        states = jnp.einsum(
+            "bcqhn,bcqhd->bchnd",
+            (jnp.repeat(bc, hg, axis=3) * decay_to_end[..., None]).astype(x.dtype),
+            xc,
+        )                                                        # (B,nc,H,hs,hd)
+
+        # 3. inter-chunk recurrence via associative scan:
+        #    h_c = exp(sum dA_c) * h_{c-1} + states_c
+        chunk_decay = jnp.exp(dac_cum[:, :, -1, :])              # (B,nc,H)
+
+        def combine(left, right):
+            al, sl = left
+            ar, sr = right
+            return al * ar, sr + ar * sl
+
+        dec, hidden = jax.lax.associative_scan(
+            combine,
+            (chunk_decay[..., None, None].astype(jnp.float32),
+             states.astype(jnp.float32)),
+            axis=1,
+        )
+        # state entering chunk c is hidden[c-1]
+        h_prev = jnp.concatenate(
+            [jnp.zeros_like(hidden[:, :1]), hidden[:, :-1]], axis=1
+        ).astype(x.dtype)                                        # (B,nc,H,hs,hd)
+
+        # 4. inter-chunk output: decay-in * C @ h_prev
+        decay_in = jnp.exp(dac_cum)                              # (B,nc,q,H)
+        cx = jnp.repeat(cc, hg, axis=3)                          # (B,nc,q,H,hs)
+        y_off = jnp.einsum(
+            "bcqhn,bchnd->bcqhd",
+            (cx * decay_in[..., None]).astype(x.dtype), h_prev,
+        )
+        y = (y_diag + y_off).reshape(bsz, s, h, hd)
+        return y
+
+    # ------------------------------------------------------------ layer body
+    def _layer(self, lp, la, x, cache=None):
+        cfg = self.cfg
+        bsz, s, d = x.shape
+        h, hd, hs = self.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        xn = rms_norm(x, lp["ln"], cfg.norm_eps)
+        z, xs, bc, dt_raw = self._project(lp, la, xn)
+        xbc = jnp.concatenate([xs, bc], axis=-1)                 # (B,S,conv_dim)
+
+        new_cache = None
+        if cache is None:
+            xbc = self._conv(lp, xbc)
+        else:
+            ssm_state, conv_state = cache                        # (B,H,hs,hd), (B,K-1,conv)
+            window = jnp.concatenate([conv_state, xbc], axis=1)  # (B,K,conv)
+            conv_out = jnp.einsum("bkc,kc->bc", window, lp["conv_w"])
+            xbc = jax.nn.silu(conv_out + lp["conv_b"])[:, None, :]
+            new_conv = window[:, 1:, :]
+
+        xs2 = xbc[..., : self.d_inner].reshape(bsz, -1, h, hd)
+        b_mat = xbc[..., self.d_inner : self.d_inner + self.n_groups * hs]
+        c_mat = xbc[..., self.d_inner + self.n_groups * hs :]
+        b_mat = b_mat.reshape(bsz, -1, self.n_groups, hs)
+        c_mat = c_mat.reshape(bsz, -1, self.n_groups, hs)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32))         # (B,S,H)
+        a = -jnp.exp(lp["a_log"].astype(jnp.float32))            # (H,)
+
+        if cache is None:
+            y = self._ssd_chunked(xs2, dt, a, b_mat, c_mat)
+        else:
+            # recurrent step: h' = exp(dt*a) h + (dt*x) outer B ; y = C . h'
+            da = jnp.exp(dt[:, 0, :] * a[None, :])               # (B,H)
+            xdt = xs2[:, 0] * dt[:, 0, :, None]                  # (B,H,hd)
+            bg = jnp.repeat(b_mat[:, 0], h // self.n_groups, axis=1)  # (B,H,hs)
+            cg = jnp.repeat(c_mat[:, 0], h // self.n_groups, axis=1)
+            new_state = (
+                ssm_state * da[..., None, None]
+                + jnp.einsum("bhn,bhd->bhnd", bg, xdt).astype(ssm_state.dtype)
+            )
+            y = jnp.einsum("bhn,bhnd->bhd", cg, new_state.astype(cg.dtype))
+            y = y[:, None, :, :]                                 # (B,1,H,hd)
+            new_cache = (new_state, new_conv)
+
+        y = y + xs2 * lp["d_skip"].astype(y.dtype)[None, None, :, None]
+        y = y.reshape(bsz, -1, self.d_inner)
+        y = rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+        out = peft_linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
+        return x + out, new_cache
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, peft=None, *, last_only: bool = False):
+        cfg = self.cfg
+        x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(x, xs):
+            lp, la = xs
+            x, _ = self._layer(lp, la, x)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["layers"], layer_adapters))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if last_only:
+            x = x[:, -1:]
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+        return logits, jnp.float32(0.0)
+
+    def loss(self, params, peft, batch):
+        cfg = self.cfg
+        x = self._hidden(params, batch, peft)
+        return fused_cross_entropy(
+            x, params["lm_head"].astype(cfg.compute_dtype),
+            batch["labels"], cfg.vocab_size,
+        )
+
+    def _hidden(self, params, batch, peft=None):
+        cfg = self.cfg
+        x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(x, xs):
+            lp, la = xs
+            x, _ = self._layer(lp, la, x)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["layers"], layer_adapters))
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or cfg.param_dtype
+        h, hd, hs = self.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch, h, hs, hd), jnp.float32),
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.conv_kernel - 1, self.conv_dim), dt
+            ),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, peft, batch):
+        # Prefill computes logits; final states are recovered by the engine
+        # via decode replay for the (rare) prefill->decode transition, or by
+        # the chunked scan returning final states (not needed in dry-run).
+        logits, _ = self.forward(params, batch, peft, last_only=True)
+        cache = self.init_cache(
+            batch["tokens"].shape[0], batch["tokens"].shape[1]
+        )
+        return logits, cache
+
+    def decode_step(self, params, peft, cache, batch):
+        cfg = self.cfg
+        x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
+        layer_adapters = (peft or {}).get("layers", {})
+        new_len = cache["len"] + 1
+
+        def body(x, xs):
+            lp, la, ssm_l, conv_l = xs
+            x, (ssm_l, conv_l) = self._layer(lp, la, x, cache=(ssm_l, conv_l))
+            return x, (ssm_l, conv_l)
+
+        x, (ssm_new, conv_new) = jax.lax.scan(
+            body, x, (params["layers"], layer_adapters, cache["ssm"],
+                      cache["conv"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+        new_cache = {"ssm": ssm_new, "conv": conv_new, "len": new_len}
+        return _mask_vocab_pad(logits, cfg.vocab_size), new_cache

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with group-local, gather-only capacity dispatch.
+
+Dense-all-experts compute would inflate MoE FLOPs by ``E / top_k``; instead
+tokens are routed with a static per-expert capacity (GShard-style drop).
+Two properties make this formulation shard cleanly under GSPMD:
+
+1. **Group-local dispatch** — tokens are split into ``groups`` (set to the
+   DP shard count by the launcher), and the sort/dispatch runs batched
+   *within* each group.  No cross-device data movement happens until the
+   expert GEMM, where GSPMD inserts the EP collective implied by the
+   weight sharding.  (A single global argsort+scatter formulation measured
+   56 GiB/dev temp on mixtral train_4k — see EXPERIMENTS.md §Perf.)
+2. **Gather-only data movement** — the (expert, slot) -> token mapping is
+   derived from a double-argsort so both dispatch and combine are
+   ``take_along_axis`` gathers (GSPMD shards batched gathers on the group
+   axis; scatters it cannot).
+
+Expert GEMMs are ``(g, E, C, d) @ (E, d, ff)`` batched matmuls — E
+well-shaped MXU GEMMs per group.
+
+Sharding (see ``repro/launch/shardings.py``): expert axis over ``model``
+when ``E % model == 0`` (llama4, + FSDP over ``data`` for its 400B), else
+per-expert ``d_ff`` over ``model`` (mixtral).
+
+Serving calls with ``no_drop=True`` (capacity == tokens): deployments never
+drop tokens at inference; capacity-drop is a training-throughput trade-off.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn", "expert_capacity"]
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    capacity_factor: float) -> int:
+    cap = int(math.ceil(n_tokens * top_k * capacity_factor / n_experts))
+    cap = min(cap, n_tokens)  # an expert can never hold more than T tokens
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def _constrain(x: jnp.ndarray, dp_axes: Optional[Sequence[str]]):
+    """Pin the group axis to the DP mesh axes (GSPMD would otherwise be
+    free to split the group dim arbitrarily, cf. the microbatch-reshape
+    pathology in repro.train.loop)."""
+    if not dp_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(dp_axes), *([None] * (x.ndim - 1)))
+    )
+
+
+def moe_ffn(
+    x: jnp.ndarray,                  # (B, S, d)
+    params: Dict[str, jnp.ndarray],
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    no_drop: bool = False,
+    groups: int = 1,
+    dp_axes: Optional[Sequence[str]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(output (B, S, d), aux_loss scalar)``."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = n_experts, top_k
+    if no_drop:
+        capacity_factor = n_experts / max(top_k, 1)
+    g = groups if (groups > 0 and t % groups == 0) else 1
+    tg = t // g
+    cap = expert_capacity(tg, e, k, capacity_factor)
+    n = tg * k
+
+    xf = _constrain(x.reshape(g, tg, d), dp_axes)
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32),
+        params["router"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g,tg,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (g,tg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # Switch aux loss: E * sum_e f_e * p_e (over all tokens)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    aux_loss = e * jnp.sum(
+        one_hot_top1.mean((0, 1)) * probs.mean((0, 1))
+    )
+
+    # --- group-local sort dispatch (double argsort; gathers only) ---
+    flat_e = expert_idx.reshape(g, n)                          # (g,N)
+    flat_gate = gate_vals.reshape(g, n).astype(x.dtype)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)          # (g,N)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e + 1))
+    )(sorted_e)                                                # (g,E+1)
+
+    # (expert, slot) -> source assignment (gather from `order`)
+    pos = first[:, :-1, None] + jnp.arange(cap)[None, None, :]  # (g,E,cap)
+    valid = pos < first[:, 1:, None]
+    pos_flat = jnp.minimum(pos, n - 1).reshape(g, e * cap)
+    src_assign = jnp.take_along_axis(order, pos_flat, axis=-1)  # (g,E*cap)
+    src_token = src_assign // k
+
+    buf = jnp.take_along_axis(xf, src_token[..., None], axis=1)
+    buf = jnp.where(valid.reshape(g, e * cap, 1), buf, 0)
+    buf = _constrain(buf.reshape(g, e, cap, d), dp_axes)
+
+    # --- expert FFN: batched GEMMs over (group, expert) ---
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, params["gate_proj"])
+    h_up = jnp.einsum("gecd,edf->gecf", buf, params["up_proj"])
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["down_proj"])
+    out_buf = _constrain(out_buf, dp_axes).reshape(g, e * cap, d)
+
+    # --- combine (gathers only): assignment -> its capacity slot ---
+    inv = jnp.argsort(order, axis=-1, stable=True)             # (g,N)
+    rank = inv - jnp.take_along_axis(first[:, :-1], flat_e, axis=-1)
+    kept = rank < cap
+    slot = flat_e * cap + jnp.minimum(rank, cap - 1)           # (g,N)
+    contrib = jnp.take_along_axis(out_buf, slot[..., None], axis=1)
+    contrib = contrib * jnp.where(kept, flat_gate, 0)[..., None]
+    out = contrib.reshape(g, tg, k, d).sum(axis=2)
+    return out.reshape(b, s, d), aux_loss

@@ -1,0 +1,354 @@
+"""Decoder-only transformer family: dense (phi3 / minicpm / qwen2 / yi),
+MoE (mixtral / llama4), audio backbone (musicgen), VLM backbone (pixtral).
+
+Layers are scan-stacked (``params["layers"]`` leaves have leading dim L) so
+a single layer lowers once regardless of depth; PEFT adapters are stacked
+along the same axis and sliced by the scan in lockstep (see
+``repro.core.peft``).  ``jax.checkpoint`` remats each layer during training.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.peft import get_adapter, peft_linear
+from repro.models.attention import blockwise_causal_attention, decode_attention
+from repro.models.common import (
+    ModelConfig,
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    fused_cross_entropy,
+    make_rope,
+    rms_norm,
+)
+from repro.models.moe import moe_ffn
+
+__all__ = ["Transformer", "padded_vocab"]
+
+
+def padded_vocab(vocab: int) -> int:
+    """Pad vocab to a multiple of 128 so embeddings/logits shard cleanly."""
+    return ((vocab + 127) // 128) * 128
+
+
+class Transformer:
+    """Functional decoder-only transformer (no framework)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        keys = iter(jax.random.split(key, 64))
+        vpad = padded_vocab(cfg.vocab_size)
+
+        def stack(fn, n=cfg.n_layers):
+            return jax.vmap(fn)(jax.random.split(next(keys), n))
+
+        d, ad, kvd, ff = cfg.d_model, cfg.attn_dim, cfg.kv_dim, cfg.d_ff
+        attn = {
+            "q_proj": stack(lambda k: dense_init(k, d, ad, dt)),
+            "k_proj": stack(lambda k: dense_init(k, d, kvd, dt)),
+            "v_proj": stack(lambda k: dense_init(k, d, kvd, dt)),
+            "o_proj": stack(lambda k: dense_init(k, ad, d, dt)),
+        }
+        if cfg.qkv_bias:
+            attn["q_bias"] = jnp.zeros((cfg.n_layers, ad), dt)
+            attn["k_bias"] = jnp.zeros((cfg.n_layers, kvd), dt)
+            attn["v_bias"] = jnp.zeros((cfg.n_layers, kvd), dt)
+
+        layers: Dict[str, Any] = {
+            "attn": attn,
+            "ln1": jnp.ones((cfg.n_layers, d), dt),
+            "ln2": jnp.ones((cfg.n_layers, d), dt),
+        }
+        if cfg.is_moe:
+            e = cfg.n_experts
+            layers["moe"] = {
+                "router": stack(lambda k: dense_init(k, d, e, dt)),
+                "gate_proj": stack(
+                    lambda k: jax.vmap(lambda kk: dense_init(kk, d, ff, dt))(
+                        jax.random.split(k, e)
+                    )
+                ),
+                "up_proj": stack(
+                    lambda k: jax.vmap(lambda kk: dense_init(kk, d, ff, dt))(
+                        jax.random.split(k, e)
+                    )
+                ),
+                "down_proj": stack(
+                    lambda k: jax.vmap(lambda kk: dense_init(kk, ff, d, dt))(
+                        jax.random.split(k, e)
+                    )
+                ),
+            }
+            if getattr(cfg, "n_shared_experts", 0):
+                pass  # shared experts handled via dense mlp below
+        else:
+            layers["mlp"] = {
+                "gate_proj": stack(lambda k: dense_init(k, d, ff, dt)),
+                "up_proj": stack(lambda k: dense_init(k, d, ff, dt)),
+                "down_proj": stack(lambda k: dense_init(k, ff, d, dt)),
+            }
+
+        params: Dict[str, Any] = {
+            "layers": layers,
+            "final_norm": jnp.ones((d,), dt),
+        }
+        if cfg.frontend != "audio_tokens" and cfg.frontend != "vision_embeds":
+            params["embed"] = {"tokens": embed_init(next(keys), vpad, d, dt)}
+        elif cfg.frontend == "vision_embeds":
+            params["embed"] = {"tokens": embed_init(next(keys), vpad, d, dt)}
+        # audio backbone: frontend stub provides frame embeddings, no table.
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(next(keys), d, vpad, dt)
+        return params
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.frontend == "audio_tokens":
+            # STUB frontend: EnCodec frame embeddings precomputed upstream.
+            return batch["embeds"].astype(cfg.compute_dtype)
+        if cfg.frontend == "vision_embeds":
+            # STUB frontend: ViT patch embeddings precomputed upstream;
+            # sequence = [patch_embeds ; text token embeds].
+            tok = params["embed"]["tokens"][batch["tokens"]]
+            patches = batch["patch_embeds"].astype(tok.dtype)
+            return jnp.concatenate([patches, tok], axis=1).astype(
+                cfg.compute_dtype
+            )
+        return params["embed"]["tokens"][batch["tokens"]].astype(
+            cfg.compute_dtype
+        )
+
+    def _unembed(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = params["embed"]["tokens"].astype(cfg.compute_dtype)
+            return x @ w.T
+        return x @ params["lm_head"].astype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------ layer body
+    def _attn(self, lp, la, x, *, rope, window, cache=None):
+        """Attention sub-block.  ``cache=(k_cache, v_cache, cache_len)`` for
+        decode; returns ``(out, new_kv)``."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        q = peft_linear(x, lp["q_proj"], get_adapter(la, "q_proj"),
+                        lp.get("q_bias"))
+        k = peft_linear(x, lp["k_proj"], get_adapter(la, "k_proj"),
+                        lp.get("k_bias"))
+        v = peft_linear(x, lp["v_proj"], get_adapter(la, "v_proj"),
+                        lp.get("v_bias"))
+        q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+        if cache is None:
+            out = blockwise_causal_attention(
+                q, k, v, q_block=cfg.q_block, window=window,
+                fast_softmax=cfg.fast_softmax,
+            )
+            new_kv = (k, v)
+        else:
+            k_cache, v_cache, cache_len = cache
+            idx = cache_len - 1  # slot of the new token (already counted)
+            b_idx = jnp.arange(b)
+            k_cache = k_cache.at[b_idx, idx].set(k[:, 0])
+            v_cache = v_cache.at[b_idx, idx].set(v[:, 0])
+            out = decode_attention(
+                q, k_cache, v_cache, cache_len, window=window
+            )
+            new_kv = (k_cache, v_cache)
+        out = out.reshape(b, s, cfg.attn_dim)
+        out = peft_linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
+        return out, new_kv
+
+    def _mlp(self, lp, la, x):
+        g = peft_linear(x, lp["gate_proj"], get_adapter(la, "gate_proj"))
+        u = peft_linear(x, lp["up_proj"], get_adapter(la, "up_proj"))
+        return peft_linear(
+            jax.nn.silu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
+        )
+
+    def _layer(self, lp, la, x, *, rope, cache=None):
+        cfg = self.cfg
+        h, new_kv = self._attn(
+            lp["attn"], get_subtree(la, "attn"), rms_norm(x, lp["ln1"], cfg.norm_eps),
+            rope=rope, window=cfg.sliding_window, cache=cache,
+        )
+        x = x + h
+        hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out, aux = moe_ffn(
+                hn, lp["moe"],
+                n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                no_drop=cache is not None,   # serving never drops tokens
+                groups=cfg.moe_groups, dp_axes=cfg.dp_axes,
+            )
+        else:
+            out, aux = self._mlp(lp["mlp"], get_subtree(la, "mlp"), hn), 0.0
+        return x + out, aux, new_kv
+
+    # --------------------------------------------------------------- forward
+    def forward(
+        self,
+        params: Dict[str, Any],
+        batch: Dict[str, jnp.ndarray],
+        peft: Optional[Dict[str, Any]] = None,
+        *,
+        return_cache: bool = False,
+        last_only: bool = False,
+    ):
+        """Full-sequence forward.  Returns ``logits`` or
+        ``(logits, cache)`` when ``return_cache`` (prefill).
+        ``last_only`` unembeds only the final position (prefill never needs
+        the full (B, S, V) logits)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.arange(s)[None, :]
+        rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, la = xs
+            x, aux_i, kv = self._layer(lp, la, x, rope=rope)
+            out = kv if return_cache else None
+            return (x, aux + aux_i), out
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), kv = jax.lax.scan(
+            body_fn, (x, jnp.float32(0.0)), (params["layers"], layer_adapters)
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if last_only:
+            x = x[:, -1:]
+        logits = self._unembed(params, x)
+        if return_cache:
+            k, v = kv  # (L, B, S, KV, hd)
+            cache = {
+                "k": k,
+                "v": v,
+                "len": jnp.full((b,), s, jnp.int32),
+            }
+            return logits, aux, cache
+        return logits, aux
+
+    def _hidden(self, params, batch, peft=None):
+        """Backbone only: final-norm hidden states + aux loss (no unembed)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, la = xs
+            x, aux_i, _ = self._layer(lp, la, x, rope=rope)
+            return (x, aux + aux_i), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(
+            body_fn, (x, jnp.float32(0.0)), (params["layers"], layer_adapters)
+        )
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+    def head_weight(self, params) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return params["embed"]["tokens"].astype(cfg.compute_dtype).T
+        return params["lm_head"].astype(cfg.compute_dtype)
+
+    def loss(self, params, peft, batch) -> jnp.ndarray:
+        """Training loss via the fused chunked CE head (never materializes
+        the full (B, S, V) logits — see common.fused_cross_entropy)."""
+        cfg = self.cfg
+        x, aux = self._hidden(params, batch, peft)
+        ce = fused_cross_entropy(
+            x, self.head_weight(params), batch["labels"], cfg.vocab_size
+        )
+        return ce + cfg.router_aux_weight * aux
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = dtype or cfg.param_dtype
+        return {
+            "k": jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+            ),
+            "v": jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+            ),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, peft, batch):
+        """Prefill: fills the KV cache; returns last-position logits only."""
+        logits, _aux, cache = self.forward(
+            params, batch, peft, return_cache=True, last_only=True
+        )
+        return logits, cache
+
+    def decode_step(self, params, peft, cache, batch):
+        """One decode step.  ``batch`` holds the single new token (or frame
+        embedding); cache slots at ``len`` are written then attended."""
+        cfg = self.cfg
+        if cfg.frontend == "audio_tokens":
+            x = batch["embeds"].astype(cfg.compute_dtype)      # (B, 1, d)
+        else:
+            x = params["embed"]["tokens"][batch["tokens"]].astype(
+                cfg.compute_dtype
+            )                                                   # (B, 1, d)
+        b = x.shape[0]
+        new_len = cache["len"] + 1
+        positions = (new_len - 1)[:, None]                      # (B, 1)
+        rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(x, xs):
+            lp, la, k_l, v_l = xs
+            x, _aux, (k_l, v_l) = self._layer(
+                lp, la, x, rope=rope, cache=(k_l, v_l, new_len)
+            )
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], layer_adapters, cache["k"], cache["v"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._unembed(params, x)
+        new_cache = {"k": k_new, "v": v_new, "len": new_len}
+        return _mask_vocab_pad(logits, cfg.vocab_size), new_cache
+
+
+def get_subtree(tree, key):
+    if isinstance(tree, dict) and key in tree:
+        return tree[key]
+    return {}
+
+
+def _mask_vocab_pad(logits: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Mask padded vocab columns so they never win softmax/logsumexp."""
+    vpad = logits.shape[-1]
+    if vpad == vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, (vpad,), 0)
+    return jnp.where(col < vocab, logits, jnp.finfo(logits.dtype).min)

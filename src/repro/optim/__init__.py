@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+
+from repro.optim.adamw import AdamW, AdamWState, global_norm, clip_by_global_norm
+from repro.optim.schedules import linear_warmup_schedule, wsd_schedule, constant_schedule
+from repro.optim.compress import (
+    ErrorFeedbackState,
+    compress_int8,
+    decompress_int8,
+    ef_compress_grads,
+    ef_init,
+)

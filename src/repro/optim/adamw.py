@@ -1,0 +1,101 @@
+"""AdamW in pure JAX (the paper fine-tunes every method with AdamW +
+linear schedule, Tables E.2-E.4).
+
+The optimizer operates on whatever pytree it is given — for PEFT runs that
+is the adapter tree only, so first/second-moment state exists **only for
+trainable parameters** (the memory argument of paper §6: QuanTA's optimizer
+state is ~0.04% of the full-FT state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "clip_by_global_norm"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree
+    ), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """``AdamW(lr_schedule)(params)`` -> state; ``update(grads, state,
+    params)`` -> (new_params, new_state)."""
+
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: Optional[float] = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda x: jnp.zeros_like(x, dtype=jnp.float32)  # noqa: E731
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def _lr(self, step: jnp.ndarray) -> jnp.ndarray:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.float32(self.lr)
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any
+    ) -> Tuple[Any, AdamWState]:
+        if self.max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,92 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam-style EF).
+
+At pod scale the PEFT-gradient all-reduce over ``(pod, data)`` crosses the
+DCI; int8 quantization cuts those bytes 4x.  Error feedback keeps the
+compression unbiased over time: the residual of each round is added back
+before the next quantization, which preserves convergence (Karimireddy et
+al. 2019).
+
+Two integration points:
+* :func:`ef_compress_grads` — quantize->dequantize with persistent error
+  state at the optimizer boundary (models the wire format; used by the pjit
+  trainer where the all-reduce itself is GSPMD-generated).
+* :func:`compressed_psum` — a shard_map-level reducer that actually moves
+  int8 over the wire (all_gather of int8 shards + local fp32 sum); used by
+  the manual-collective trainer and the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ErrorFeedbackState",
+    "compress_int8",
+    "decompress_int8",
+    "ef_init",
+    "ef_compress_grads",
+    "compressed_psum",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackState:
+    error: Any  # pytree of fp32 residuals, same structure as grads
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(grads_template: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        error=jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), grads_template
+        )
+    )
+
+
+def ef_compress_grads(
+    grads: Any, state: ErrorFeedbackState
+) -> Tuple[Any, ErrorFeedbackState]:
+    """Quantize (grad + error); return dequantized grads + new residuals."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = compress_int8(corrected)
+        deq = decompress_int8(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        ErrorFeedbackState(error=treedef.unflatten([o[1] for o in outs])),
+    )
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """All-reduce that moves int8 on the wire: quantize locally,
+    all_gather the int8 shards + scales, sum dequantized replicas.
+
+    Must be called inside ``shard_map`` with ``axis_name`` bound.
+    """
+    q, scale = compress_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)          # (N, ...) int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (N,)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return jnp.sum(deq, axis=0).astype(x.dtype)

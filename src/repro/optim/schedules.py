@@ -1,0 +1,48 @@
+"""LR schedules: linear warmup+decay (the paper's choice) and WSD
+(warmup-stable-decay — minicpm-2b's schedule, arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup_schedule", "wsd_schedule", "constant_schedule"]
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup_schedule(lr: float, total_steps: int, warmup_steps: int = 0):
+    """Linear warmup then linear decay to 0 (paper Tables E.2-E.4)."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        frac = jnp.clip(
+            (total_steps - step) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0, 1.0,
+        )
+        return jnp.float32(lr) * jnp.where(step < warmup_steps, warm, frac)
+
+    return fn
+
+
+def wsd_schedule(lr: float, total_steps: int, warmup_steps: int,
+                 decay_steps: int, floor: float = 0.0):
+    """Warmup -> stable plateau -> linear decay over the last
+    ``decay_steps`` (MiniCPM)."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        decay_start = total_steps - decay_steps
+        decay = 1.0 - (1.0 - floor) * jnp.clip(
+            (step - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0
+        )
+        mult = jnp.where(
+            step < warmup_steps, warm,
+            jnp.where(step < decay_start, 1.0, decay),
+        )
+        return jnp.float32(lr) * mult
+
+    return fn

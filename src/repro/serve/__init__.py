@@ -1,0 +1,4 @@
+"""Serving runtime: batched continuous-batching engine over merged or
+adapter-attached models."""
+
+from repro.serve.engine import Request, ServingEngine

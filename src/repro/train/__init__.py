@@ -1,0 +1,4 @@
+"""Training runtime: train state, step builder, elastic control, pipeline."""
+
+from repro.train.loop import TrainState, make_train_step, make_eval_step
+from repro.train.elastic import ElasticController, StragglerMonitor, plan_mesh

@@ -1,0 +1,158 @@
+"""Train-step builder: PEFT-aware, microbatched, compression-ready.
+
+The gradient is taken **only with respect to the trainable tree** (the
+adapter pytree for QuanTA/LoRA/..., the full params for FT) — XLA never
+materializes base-weight gradients, which is what makes 14B-scale
+fine-tuning fit the per-device memory budget (weights bf16 + small
+activations + tiny fp32 adapter state).
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches with fp32
+accumulators; the data-parallel mean over ``(pod, data)`` is GSPMD-implicit
+from the batch sharding.  Optional int8 error-feedback compression is
+applied at the reduction boundary (see ``repro.optim.compress``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.compress import ErrorFeedbackState, ef_compress_grads, ef_init
+
+__all__ = ["TrainState", "make_train_step", "make_eval_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any                 # frozen base weights (S already folded in)
+    peft: Any                   # trainable adapter tree ({} for full FT)
+    opt_state: AdamWState
+    ef_state: Optional[ErrorFeedbackState]
+    step: jnp.ndarray
+
+    @staticmethod
+    def create(params, peft, optimizer: AdamW, *, compress: bool = False,
+               full_ft: bool = False) -> "TrainState":
+        trainable = params if full_ft else peft
+        opt_state = optimizer.init(trainable)
+        ef = ef_init(trainable) if compress else None
+        return TrainState(
+            params=params, peft=peft, opt_state=opt_state, ef_state=ef,
+            step=jnp.zeros((), jnp.int32),
+        )
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int,
+                        dp: Optional[Tuple[str, ...]] = None):
+    """Reshape (B, ...) -> (m, B/m, ...).  With ``dp`` given, constrain the
+    result to P(None, dp, ...) — without this, GSPMD is free to shard the
+    *microbatch* (scan) axis across devices, which serializes the scan into
+    per-iteration all-gathers and stacks residuals 8x (observed: 30 GiB/dev
+    on qwen2 train_4k before the constraint, see EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec as P
+
+    def reshape(x):
+        b = x.shape[0]
+        if b % m:
+            raise ValueError(f"batch {b} not divisible by microbatches {m}")
+        out = x.reshape(m, b // m, *x.shape[1:])
+        if dp:
+            out = jax.lax.with_sharding_constraint(
+                out, P(None, dp, *([None] * (x.ndim - 1)))
+            )
+        return out
+
+    return jax.tree_util.tree_map(reshape, batch)
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+    compress: bool = False,
+    full_ft: bool = False,
+    dp_axes: Optional[Tuple[str, ...]] = None,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    """Build the jittable ``train_step(state, batch) -> (state, metrics)``.
+
+    ``dp_axes``: mesh axis names carrying data parallelism; required when
+    running under a mesh with ``microbatches > 1`` (sharding constraint on
+    the microbatch split)."""
+
+    def loss_fn(trainable, frozen, mb):
+        if full_ft:
+            return model.loss(trainable, {}, mb)
+        # stop_gradient marks base-weight cotangents as symbolic zeros so
+        # the scan transpose prunes them; without it the backward stacks
+        # fp32 weight-grad residuals for every frozen layer (+8 GiB/dev on
+        # mixtral train_4k — see EXPERIMENTS.md §Perf).
+        frozen = jax.lax.stop_gradient(frozen)
+        return model.loss(frozen, trainable, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        trainable = state.params if full_ft else state.peft
+        frozen = None if full_ft else state.params
+
+        if microbatches == 1:
+            loss, grads = grad_fn(trainable, frozen, batch)
+        else:
+            mbs = _split_microbatches(batch, microbatches, dp_axes)
+            zero = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), trainable
+            )
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                loss, g = grad_fn(trainable, frozen, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return (acc, loss_sum + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero, jnp.float32(0.0)), mbs
+            )
+            inv = 1.0 / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+
+        ef_state = state.ef_state
+        if compress:
+            grads, ef_state = ef_compress_grads(grads, ef_state)
+
+        new_trainable, new_opt = optimizer.update(
+            grads, state.opt_state, trainable
+        )
+        from repro.optim.adamw import global_norm
+        metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "step": state.step + 1,
+        }
+        new_state = TrainState(
+            params=new_trainable if full_ft else state.params,
+            peft=state.peft if full_ft else new_trainable,
+            opt_state=new_opt,
+            ef_state=ef_state,
+            step=state.step + 1,
+        )
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, *, full_ft: bool = False):
+    def eval_step(state: TrainState, batch):
+        if full_ft:
+            return model.loss(state.params, {}, batch)
+        return model.loss(state.params, state.peft, batch)
+
+    return eval_step

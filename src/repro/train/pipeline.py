@@ -1,0 +1,107 @@
+"""Pipeline parallelism: GPipe-schedule microbatch pipeline over a mesh
+``stage`` axis (at pod scale: ``pod`` = stage axis, DESIGN.md §5).
+
+The layer stack ``(L, ...)`` is sharded on L across stages; inside
+``shard_map`` each device holds ``L/P`` contiguous layers.  The classic
+rotation runs ``T = M + P - 1`` ticks: at tick ``t`` stage ``s`` processes
+microbatch ``m = t - s``; stage boundaries move through
+``jax.lax.ppermute`` (differentiable -> ``jax.grad`` works through the
+whole pipeline, giving GPipe-style backward for free).
+
+Bubble fraction = (P-1)/(T) — reported by :func:`bubble_fraction` and used
+in the §Perf napkin math.  A 1F1B re-ordering is a scheduling change on
+top of the same primitives (recorded as future work in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["pipeline_apply", "bubble_fraction"]
+
+
+def bubble_fraction(n_microbatches: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def pipeline_apply(
+    layer_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    stacked_params: Any,
+    x_mbs: jnp.ndarray,
+    *,
+    mesh: Mesh,
+    stage_axis: str = "stage",
+) -> jnp.ndarray:
+    """Run ``x`` through the full layer stack, pipelined over stages.
+
+    ``layer_fn(layer_params, h) -> h`` applies ONE layer.
+    ``stacked_params``: leaves ``(L, ...)``, L divisible by the stage count.
+    ``x_mbs``: ``(M, mb, ...)`` microbatched inputs (replicated).
+    Returns ``(M, mb, ...)`` outputs (replicated; produced on the last
+    stage and broadcast).
+    """
+    n_stages = mesh.shape[stage_axis]
+    m_total = x_mbs.shape[0]
+    n_ticks = m_total + n_stages - 1
+
+    def stage_program(local_params, x_all):
+        # local_params leaves: (L/P, ...); x_all: (M, mb, ...) replicated
+        sidx = jax.lax.axis_index(stage_axis)
+
+        def apply_local(h):
+            def body(h, lp):
+                return layer_fn(lp, h), None
+
+            h, _ = jax.lax.scan(body, h, local_params)
+            return h
+
+        # carries must be device-varying under shard_map's vma typing
+        vary = 0.0 * sidx.astype(x_all.dtype)
+        h0 = jnp.zeros_like(x_all[0]) + vary
+        outputs = jnp.zeros_like(x_all) + vary
+
+        def tick(carry, t):
+            h_recv, outputs = carry
+            m = t - sidx                           # microbatch at this stage
+            valid = (m >= 0) & (m < m_total)
+            x_first = x_all[jnp.clip(t, 0, m_total - 1)]
+            x_in = jnp.where(sidx == 0, x_first, h_recv)
+            y = apply_local(x_in)
+            # last stage stores its finished microbatch
+            is_last = sidx == n_stages - 1
+            store = valid & is_last
+            idx = jnp.clip(m, 0, m_total - 1)
+            outputs = jnp.where(store, outputs.at[idx].set(y), outputs)
+            # shift boundary activations to the next stage
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            h_next = jax.lax.ppermute(y, stage_axis, perm)
+            return (h_next, outputs), None
+
+        (_, outputs), _ = jax.lax.scan(
+            tick, (h0, outputs), jnp.arange(n_ticks)
+        )
+        # broadcast the last stage's outputs to every stage
+        last = jax.lax.psum(
+            jnp.where(sidx == n_stages - 1, 1.0, 0.0)[None] * 0 + outputs
+            * jnp.where(sidx == n_stages - 1, 1.0, 0.0),
+            stage_axis,
+        )
+        return last
+
+    from jax.experimental.shard_map import shard_map
+
+    param_specs = jax.tree_util.tree_map(
+        lambda x: P(stage_axis, *([None] * (x.ndim - 1))), stacked_params
+    )
+    fn = shard_map(
+        stage_program,
+        mesh=mesh,
+        in_specs=(param_specs, P()),
+        out_specs=P(),
+    )
+    return fn(stacked_params, x_mbs)

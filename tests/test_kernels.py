@@ -1,0 +1,120 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps +
+hypothesis property tests against the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QuantaAdapter, pair_schedule
+from repro.kernels import (
+    quanta_apply_fused,
+    quanta_apply_ref,
+    quanta_linear_fused,
+    quanta_linear_ref,
+)
+
+SHAPES = [
+    # (d_in, d_out, dims_in)
+    (64, 64, (4, 4, 4)),
+    (24, 12, (4, 3, 2)),          # rectangular, d_in > d_out
+    (128, 256, (8, 4, 4)),        # rectangular, d_in < d_out
+    (896, 896, (16, 8, 7)),       # qwen2 scheme
+    (512, 512, (8, 8, 8)),
+    (256, 256, (4, 4, 4, 4)),     # N=4, six tensors
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("d_in,d_out,dims", SHAPES)
+def test_quanta_apply_kernel_vs_oracle(d_in, d_out, dims, dtype):
+    ad = QuantaAdapter.create(
+        jax.random.PRNGKey(0), d_in, d_out, dims_in=dims, init="normal",
+        dtype=jnp.float32,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 9, d_in)).astype(dtype)
+    y_kernel = quanta_apply_fused(x, ad, block_rows=16, interpret=True)
+    tensors = [t.astype(dtype) for t in ad.tensors]
+    y_ref = quanta_apply_ref(
+        x.astype(jnp.float32),
+        [t.astype(jnp.float32) for t in tensors], ad.dims_in, ad.pairs,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_kernel, np.float32), np.asarray(y_ref), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("d_in,d_out,dims", SHAPES[:4])
+def test_quanta_linear_kernel_vs_oracle(d_in, d_out, dims, dtype):
+    ad = QuantaAdapter.create(
+        jax.random.PRNGKey(0), d_in, d_out, dims_in=dims, init="normal",
+        dtype=jnp.float32,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8, d_in)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(2), (d_in, d_out)) * 0.05
+         ).astype(dtype)
+    y_kernel = quanta_linear_fused(
+        x, w, ad, block_rows=8, block_cols=min(d_out, 64), interpret=True
+    )
+    y_ref = quanta_linear_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        [t.astype(jnp.float32) for t in ad.tensors], ad.dims_in, ad.pairs,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_kernel, np.float32), np.asarray(y_ref), **_tol(dtype)
+    )
+
+
+def test_row_padding_path():
+    """rows not divisible by block_rows exercises the pad/unpad wrapper."""
+    ad = QuantaAdapter.create(jax.random.PRNGKey(0), 24, dims_in=(4, 3, 2),
+                              init="normal")
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 24))  # 7 % 16 != 0
+    y = quanta_apply_fused(x, ad, block_rows=16, interpret=True)
+    np.testing.assert_allclose(
+        y, quanta_apply_ref(x, ad.tensors, ad.dims_in, ad.pairs),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d1=st.sampled_from([2, 3, 4]),
+    d2=st.sampled_from([2, 4, 5]),
+    d3=st.sampled_from([2, 3]),
+    rows=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_property_random_shapes(d1, d2, d3, rows, seed):
+    dims = (d1, d2, d3)
+    d = d1 * d2 * d3
+    ad = QuantaAdapter.create(jax.random.PRNGKey(seed), d, dims_in=dims,
+                              init="normal")
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (rows, d))
+    y = quanta_apply_fused(x, ad, block_rows=8, interpret=True)
+    ref = quanta_apply_ref(x, ad.tensors, ad.dims_in, ad.pairs)
+    np.testing.assert_allclose(y, ref, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_linearity_property(seed):
+    """The chain is a linear operator: f(ax + by) == a f(x) + b f(y)."""
+    ad = QuantaAdapter.create(jax.random.PRNGKey(0), 24, dims_in=(4, 3, 2),
+                              init="normal")
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (4, 24))
+    y = jax.random.normal(k2, (4, 24))
+    f = lambda v: quanta_apply_fused(v, ad, block_rows=8, interpret=True)  # noqa: E731
+    np.testing.assert_allclose(
+        f(2.0 * x - 3.0 * y), 2.0 * f(x) - 3.0 * f(y), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,156 @@
+"""QuanTA core: App. G expressions, application-path equality, zero-init,
+merge, rectangular construction, parameter-count formulas."""
+
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QuantaAdapter,
+    apply_einsum,
+    apply_einsum_expr,
+    apply_sequential,
+    factorize,
+    fold_frozen_copy,
+    init_tensors,
+    materialize,
+    materialize_einsum,
+    merge,
+    operator_einsum_expr,
+    pair_schedule,
+    param_count,
+    prime_factors,
+)
+from repro.core.peft import choose_dims
+
+
+def test_apply_expr_matches_paper_example():
+    # Paper §5: torch.einsum("...abc,efbc,diaf,ghde->...ghi", x, T3, T2, T1)
+    assert apply_einsum_expr(3) == "...abc,efbc,diaf,ghde->...ghi"
+
+
+def test_operator_expr_matches_paper_example_transposed():
+    # Paper §5 operator: "efbc,diaf,ghde->ghiabc" (out; in).  Ours is the
+    # x@W-convention transpose: same operands, output (in; out).
+    assert operator_einsum_expr(3) == "efbc,diaf,ghde->abcghi"
+
+
+def test_pair_schedule_is_paper_combination_order():
+    assert pair_schedule(3) == ((1, 2), (0, 2), (0, 1))
+    assert len(pair_schedule(4)) == 6
+    assert len(pair_schedule(5)) == 10
+    for (m, n) in pair_schedule(5):
+        assert 0 <= m < n < 5
+
+
+@pytest.mark.parametrize("dims", [(4, 3, 2), (4, 4, 4), (2, 2, 2, 2),
+                                  (3, 2, 2, 2), (5, 4, 4)])
+def test_apply_paths_agree(dims):
+    d = math.prod(dims)
+    pairs = pair_schedule(len(dims))
+    ts = init_tensors(jax.random.PRNGKey(0), dims, pairs=pairs, init="normal")
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, d))
+    y_seq = apply_sequential(x, ts, dims, pairs)
+    y_ein = apply_einsum(x, ts, dims, pairs)
+    m1 = materialize(ts, dims, pairs)
+    m2 = materialize_einsum(ts, dims, pairs)
+    np.testing.assert_allclose(y_seq, y_ein, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_seq, x @ m1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_init_fold_is_exact():
+    ad = QuantaAdapter.create(jax.random.PRNGKey(0), 24, dims_in=(4, 3, 2))
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (24, 24))
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 24))
+    w0p = fold_frozen_copy(w0, ad)
+    np.testing.assert_allclose(
+        x @ w0p + ad.delta(x), x @ w0, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_merge_no_inference_overhead():
+    ad = QuantaAdapter.create(jax.random.PRNGKey(0), 24, dims_in=(4, 3, 2),
+                              init="normal")
+    w = jax.random.normal(jax.random.PRNGKey(1), (24, 24))
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 24))
+    wm = merge(w, ad)
+    np.testing.assert_allclose(
+        x @ wm, x @ w + ad.delta(x), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("d_in,d_out,dims_in", [
+    (24, 12, (4, 3, 2)),   # d_in > d_out (App. B)
+    (12, 24, (2, 3, 2)),   # d_in < d_out
+    (24, 8, (6, 2, 2)),
+])
+def test_rectangular_construction(d_in, d_out, dims_in):
+    ad = QuantaAdapter.create(
+        jax.random.PRNGKey(0), d_in, d_out, dims_in=dims_in, init="normal"
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, d_in))
+    y = ad.delta(x)
+    assert y.shape == (7, d_out)
+    np.testing.assert_allclose(y, x @ ad.matrix(), rtol=1e-5, atol=1e-5)
+
+
+def test_param_count_formula_square():
+    # Paper §6: each tensor has (dm*dn)^2 params; one tensor per axis pair.
+    for dims in [(16, 8, 8, 4), (16, 16, 16), (16, 8, 8, 5)]:
+        pairs = pair_schedule(len(dims))
+        expect = sum((a * b) ** 2 for a, b in itertools.combinations(dims, 2))
+        assert param_count(dims, pairs) == expect
+
+
+def test_paper_llama2_7b_parameter_fraction():
+    # Paper Table 2: QuanTA 16-8-8-4 on LLaMA2-7B = 0.041% trainable.
+    dims = (16, 8, 8, 4)
+    per_matrix = param_count(dims, pair_schedule(4))
+    total = per_matrix * 2 * 32            # q_proj + v_proj, 32 layers
+    llama2_7b = 6.74e9
+    frac = 100 * total / llama2_7b
+    assert abs(frac - 0.041) < 0.003, frac
+
+
+def test_factorize_and_primes():
+    assert prime_factors(12) == [2, 2, 3]
+    assert factorize(4096, 3) == (16, 16, 16)
+    assert math.prod(factorize(5120, 4)) == 5120
+    with pytest.raises(ValueError):
+        factorize(7, 2)
+
+
+@pytest.mark.parametrize("d_in,d_out", [
+    (5120, 5120), (5120, 1280), (896, 128), (4096, 512), (2048, 4096),
+    (5120, 4096), (2560, 256), (4096, 1024),
+])
+def test_choose_dims_covers_all_arch_ratios(d_in, d_out):
+    dims_in, dims_out = choose_dims(d_in, d_out, 3)
+    assert math.prod(dims_in) == d_in
+    assert math.prod(dims_out) == d_out
+    assert dims_in[1:] == dims_out[1:]
+
+
+def test_krona_is_quanta_special_case():
+    # KronA (A kron B) == 2-axis QuanTA with two single-axis gates.
+    from repro.core.baselines import KronaAdapter
+    key = jax.random.PRNGKey(0)
+    ka = KronaAdapter.create(key, 12, 12, a_in=3)
+    # give it nonzero B so the map is nontrivial
+    ka = KronaAdapter(
+        ka.a, jax.random.normal(jax.random.PRNGKey(1), ka.b.shape), 1.0
+    )
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 12))
+    np.testing.assert_allclose(
+        ka.delta(x), x @ ka.matrix(), rtol=1e-5, atol=1e-5
+    )
+    # single-axis gates as two-axis QuanTA tensors on axes (0, 1)
+    a_gate = jnp.einsum("ij,kl->ikjl", ka.a.T, jnp.eye(4))
+    b_gate = jnp.einsum("ij,kl->ikjl", jnp.eye(3), ka.b.T)
+    y = apply_sequential(x, [a_gate, b_gate], (3, 4), [(0, 1), (0, 1)])
+    np.testing.assert_allclose(y, ka.delta(x), rtol=1e-5, atol=1e-5)
