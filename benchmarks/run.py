@@ -8,6 +8,8 @@
     commonsense_proxy -> Tables 3-4 (joint multi-task fine-tuning)
     kernel_bench      -> Limitations section (fused chain vs sequential)
     roofline          -> EXPERIMENTS.md roofline table from dry-run records
+    serve_bench       -> §6 zero-overhead serving: replay vs prefill-wave
+                         admission latency + tokens/sec per model family
 """
 
 import sys
@@ -23,13 +25,15 @@ def main() -> None:
         param_efficiency,
         roofline,
         rte_proxy,
+        serve_bench,
         subspace,
     )
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (param_efficiency, rte_proxy, drop_proxy, fig4_sweep,
-                subspace, commonsense_proxy, kernel_bench, roofline):
+                subspace, commonsense_proxy, kernel_bench, roofline,
+                serve_bench):
         try:
             mod.main()
         except Exception as e:  # noqa: BLE001

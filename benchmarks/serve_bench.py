@@ -1,0 +1,107 @@
+"""Serving-engine benchmark: replay vs prefill-wave admission.
+
+For each model family (transformer / griffin / mamba2 smoke configs) and
+each admission mode, measures on a steady engine (after a warmup batch
+that pays all jit compiles):
+
+* **admission latency** — wall time of the engine tick that admits a full
+  wave of ``PROMPT_LEN``-token prompts (the paper's zero-overhead serving
+  claim is only visible if admission does not replay prompts
+  token-by-token),
+* **jitted dispatches per wave** — prefill admission must issue O(1)
+  model calls per wave vs O(max_prompt_len) for replay (asserted here),
+* **steady-state tokens/sec** — generated tokens over the full drain.
+
+CSV rows via ``benchmarks.common.csv_row``:
+``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.serve import Request, ServingEngine
+
+FAMILIES = {
+    "transformer": "qwen2-0.5b",
+    "griffin": "recurrentgemma-2b",
+    "mamba2": "mamba2-1.3b",
+}
+N_SLOTS = 4
+MAX_LEN = 128
+PROMPT_LEN = 48
+MAX_NEW = 16
+
+
+def _prompts(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(1, 255, (PROMPT_LEN,)).tolist() for _ in range(n)
+    ]
+
+
+def _run_wave(engine, prompts, uid0=0):
+    reqs = [
+        Request(uid=uid0 + i, prompt=list(p), max_new_tokens=MAX_NEW)
+        for i, p in enumerate(prompts)
+    ]
+    for r in reqs:
+        engine.submit(r)
+    # first tick = admission (+ one fused decode step)
+    calls0 = dict(engine.stats)
+    t0 = time.perf_counter()
+    engine.step()
+    admit_s = time.perf_counter() - t0
+    admit_calls = (
+        engine.stats["prefill_calls"] - calls0["prefill_calls"]
+        + engine.stats["decode_calls"] - calls0["decode_calls"]
+        - 1                                   # the tick's own decode step
+    )
+    t0 = time.perf_counter()
+    engine.run()
+    drain_s = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in reqs)
+    return admit_s, admit_calls, toks, admit_s + drain_s
+
+
+def bench_family(family: str, arch: str):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows = []
+    for mode in ("replay", "prefill"):
+        engine = ServingEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN, admission=mode
+        )
+        _run_wave(engine, _prompts(N_SLOTS, seed=1))          # warmup/compile
+        admit_s, admit_calls, toks, total_s = _run_wave(
+            engine, _prompts(N_SLOTS, seed=2), uid0=100
+        )
+        if mode == "prefill":
+            assert admit_calls == 1, admit_calls   # O(1) dispatches per wave
+        else:
+            assert admit_calls == PROMPT_LEN, admit_calls  # O(prompt) replay
+        rows.append(csv_row(
+            f"serve_admission_{family}_{mode}",
+            admit_s * 1e6,
+            f"calls/wave={admit_calls} toks/s={toks / total_s:.0f} "
+            f"wave={N_SLOTS}x{PROMPT_LEN}tok",
+        ))
+    return rows
+
+
+def main() -> None:
+    for family, arch in FAMILIES.items():
+        for row in bench_family(family, arch):
+            print(row)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -33,7 +33,7 @@ from repro.kernels.quanta_apply import _chain_block
 __all__ = ["quanta_linear_kernel_call"]
 
 
-def _kernel(x_ref, w_ref, *refs, dims_in, pairs, n_tensors, n_col_blocks):
+def _kernel(x_ref, w_ref, *refs, dims_in, pairs, n_tensors):
     tensors = [refs[i][...] for i in range(n_tensors)]
     o_ref = refs[n_tensors]
     delta_ref = refs[n_tensors + 1]   # VMEM scratch (Br, d_out)
@@ -87,7 +87,7 @@ def quanta_linear_kernel_call(
 
     kernel = functools.partial(
         _kernel, dims_in=tuple(dims_in), pairs=tuple(pairs),
-        n_tensors=len(tensors), n_col_blocks=d_out // block_cols,
+        n_tensors=len(tensors),
     )
     return pl.pallas_call(
         kernel,

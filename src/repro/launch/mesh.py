@@ -8,11 +8,34 @@ jax init, while smoke tests and benches must keep seeing 1 device.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "dp_axes"]
+__all__ = [
+    "make_abstract_mesh",
+    "make_production_mesh",
+    "make_host_mesh",
+    "dp_axes",
+]
+
+
+def make_abstract_mesh(
+    shape: Sequence[int], axis_names: Sequence[str]
+) -> "jax.sharding.AbstractMesh":
+    """Version-portable ``AbstractMesh`` constructor.
+
+    JAX <= 0.4.x takes ``AbstractMesh(((name, size), ...))`` while newer
+    releases take ``AbstractMesh(axis_sizes, axis_names)``.  Sharding-rule
+    validation (tests, dry-run planning) must not depend on which one the
+    environment ships.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -1,7 +1,13 @@
 """Model substrate: transformer / MoE / SSD / RG-LRU backbones."""
 
-from repro.models.api import build_model, cache_specs, input_specs, param_specs
-from repro.models.common import ModelConfig, ShapeConfig
+from repro.models.api import (
+    build_model,
+    cache_slot_spec,
+    cache_specs,
+    input_specs,
+    param_specs,
+)
+from repro.models.common import CacheLeafSpec, ModelConfig, ShapeConfig
 from repro.models.griffin import Griffin
 from repro.models.mamba2 import Mamba2
 from repro.models.transformer import Transformer, padded_vocab

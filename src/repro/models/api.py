@@ -1,7 +1,13 @@
 """Model registry + uniform step/spec API used by launcher, dry-run, tests.
 
 ``build_model(cfg)`` returns one of the model classes, all exposing:
-``init``, ``forward``, ``loss``, ``init_cache``, ``prefill``, ``decode_step``.
+``init``, ``forward``, ``loss``, ``init_cache``, ``prefill``, ``decode_step``,
+``cache_spec``, ``insert_cache``.
+
+``cache_slot_spec(cfg)`` returns the declarative slot layout of the decode
+cache (a ``CacheLeafSpec`` per leaf, mirroring ``init_cache``): which axis
+is the serving-slot axis and what value a freed slot resets to.  The
+serving engine derives all cache surgery from it.
 
 ``input_specs(cfg, shape)`` builds ``jax.ShapeDtypeStruct`` stand-ins for
 every model input of a given (arch x shape) cell — weak-type-correct,
@@ -21,7 +27,13 @@ from repro.models.griffin import Griffin
 from repro.models.mamba2 import Mamba2
 from repro.models.transformer import Transformer
 
-__all__ = ["build_model", "input_specs", "cache_specs", "param_specs"]
+__all__ = [
+    "build_model",
+    "input_specs",
+    "cache_specs",
+    "cache_slot_spec",
+    "param_specs",
+]
 
 
 def build_model(cfg: ModelConfig):
@@ -78,6 +90,11 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
     return jax.eval_shape(
         lambda: model.init_cache(shape.global_batch, shape.seq_len)
     )
+
+
+def cache_slot_spec(cfg: ModelConfig):
+    """Per-leaf serving-slot layout of the decode cache (CacheLeafSpec)."""
+    return build_model(cfg).cache_spec()
 
 
 def param_specs(cfg: ModelConfig):

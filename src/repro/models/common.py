@@ -23,6 +23,12 @@ import jax.numpy as jnp
 __all__ = [
     "ModelConfig",
     "ShapeConfig",
+    "CacheLeafSpec",
+    "reset_cache_slots",
+    "merge_cache_slots",
+    "insert_cache_slots",
+    "scatter_cache_slots",
+    "gather_conv_tail",
     "rms_norm",
     "make_rope",
     "apply_rope",
@@ -127,6 +133,102 @@ class ShapeConfig:
     global_batch: int
     kind: str                         # "train" | "prefill" | "decode"
     microbatches: int = 1             # gradient-accumulation steps (train only)
+
+
+# ---------------------------------------------------------------------------
+# Declarative decode-cache slot layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheLeafSpec:
+    """Slot layout of one decode-cache leaf.
+
+    ``slot_axis`` is the axis indexed by serving slot (the batch axis of the
+    cache), ``fill`` the value a freed slot resets to (e.g. ``-1`` for the
+    Griffin ring-buffer position leaf, whose validity test is ``pos >= 0``).
+    Every model exposes ``cache_spec()`` returning a pytree of these that
+    mirrors ``init_cache(...)`` — the serving engine derives all its cache
+    surgery (reset, masked merge, prefill-wave scatter) from it instead of
+    guessing from shapes/dtypes.
+    """
+
+    slot_axis: int
+    fill: Any = 0
+
+
+def reset_cache_slots(spec, cache, slot_ids):
+    """Reset the given slots of every cache leaf to the spec's fill value."""
+    ids = jnp.asarray(slot_ids)
+
+    def one(ls: CacheLeafSpec, leaf):
+        idx = [slice(None)] * leaf.ndim
+        idx[ls.slot_axis] = ids
+        return leaf.at[tuple(idx)].set(jnp.asarray(ls.fill, leaf.dtype))
+
+    return jax.tree_util.tree_map(one, spec, cache)
+
+
+def merge_cache_slots(spec, new_cache, old_cache, active):
+    """Keep ``new_cache`` stripes only where ``active`` (bool per slot)."""
+    act = jnp.asarray(active)
+
+    def one(ls: CacheLeafSpec, new, old):
+        sel = act.reshape(
+            (1,) * ls.slot_axis + (-1,) + (1,) * (new.ndim - ls.slot_axis - 1)
+        )
+        return jnp.where(sel, new, old)
+
+    return jax.tree_util.tree_map(one, spec, new_cache, old_cache)
+
+
+def gather_conv_tail(x, lengths, window):
+    """Last ``window`` pre-conv inputs of each right-padded row (zero-filled
+    where the prompt is shorter than ``window``): exactly the rolling conv
+    state decode keeps between steps (``window[:, 1:]`` of raw inputs), so
+    prefill -> decode handoffs for Mamba2 and Griffin stay in sync.
+
+    ``x`` (B, S, C), ``lengths`` (B,) -> (B, window, C).
+    """
+    b, s = x.shape[0], x.shape[1]
+    idx = lengths[:, None] - window + jnp.arange(window)     # (B, window)
+    tail = x[jnp.arange(b)[:, None], jnp.clip(idx, 0, s - 1)]
+    return jnp.where((idx >= 0)[..., None], tail, 0)
+
+
+def insert_cache_slots(spec, cache, slot_ids, prefill_cache, lengths=None):
+    """Shared ``insert_cache`` body: scatter a prefill wave's cache stripes
+    into ``cache`` at ``slot_ids``, optionally overriding the wave's per-row
+    ``len`` leaf (for prefills that did not receive ``lengths``)."""
+    if lengths is not None:
+        prefill_cache = dict(
+            prefill_cache, len=jnp.asarray(lengths, jnp.int32)
+        )
+    return scatter_cache_slots(spec, cache, slot_ids, prefill_cache)
+
+
+def scatter_cache_slots(spec, cache, slot_ids, wave_cache):
+    """Scatter the first ``len(slot_ids)`` slot stripes of ``wave_cache``
+    into ``cache`` at ``slot_ids``.
+
+    Leaves of ``wave_cache`` may be shorter than ``cache`` along non-slot
+    axes (a prefill wave padded to less than ``max_len``); such axes are
+    scattered as a prefix — valid because every consumer masks by the
+    per-slot length (``decode_attention``) or ring-buffer position.
+    """
+    n = len(slot_ids)
+    ids = jnp.asarray(slot_ids)
+
+    def one(ls: CacheLeafSpec, dst, src):
+        ax = ls.slot_axis
+        src = jax.lax.slice_in_dim(src, 0, n, axis=ax)
+        idx = [slice(None)] * dst.ndim
+        idx[ax] = ids
+        for d in range(dst.ndim):
+            if d != ax and src.shape[d] != dst.shape[d]:
+                idx[d] = slice(0, src.shape[d])
+        return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+
+    return jax.tree_util.tree_map(one, spec, cache, wave_cache)
 
 
 # ---------------------------------------------------------------------------

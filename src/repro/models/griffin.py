@@ -27,12 +27,15 @@ import jax.numpy as jnp
 from repro.core.peft import get_adapter, peft_linear
 from repro.models.attention import blockwise_causal_attention
 from repro.models.common import (
+    CacheLeafSpec,
     ModelConfig,
     apply_rope,
     cross_entropy_loss,
     dense_init,
     embed_init,
     fused_cross_entropy,
+    gather_conv_tail,
+    insert_cache_slots,
     make_rope,
     rms_norm,
 )
@@ -151,9 +154,11 @@ class Griffin:
             jax.nn.gelu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
         )
 
-    def _rec_block(self, lp, la, x, state=None):
+    def _rec_block(self, lp, la, x, state=None, prefill_lengths=None):
         """Griffin recurrent block.  state = (lru (B, dr), conv (B, K-1, dr))
-        for decode; None for full-sequence (associative scan)."""
+        for decode; None for full-sequence (associative scan).  With
+        ``prefill_lengths`` (right-padded batched prefill) the block also
+        returns a decode-ready (lru, conv) state pair."""
         cfg = self.cfg
         b, s, _ = x.shape
         xn = rms_norm(x, lp["ln"], cfg.norm_eps)
@@ -164,7 +169,8 @@ class Griffin:
 
         k = cfg.conv_kernel
         if state is None:
-            pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+            u_raw = u                    # pre-conv: what the decode conv
+            pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))   # window stores
             u = sum(
                 pad[:, i : i + s, :] * lp["conv_w"][i][None, None, :]
                 for i in range(k)
@@ -183,14 +189,30 @@ class Griffin:
         log_a = -_LRU_C * jax.nn.softplus(
             lp["lambda"].astype(jnp.float32)
         ) * r                                                    # (B,S,dr)
+        if state is None and prefill_lengths is not None:
+            # Right-padded prefill: force pad positions to the identity
+            # update (a=1 exactly, input 0) so the scan's final value is
+            # the state at each row's last real token.
+            pad_mask = (
+                jnp.arange(s)[None, :] < prefill_lengths[:, None]
+            ).astype(jnp.float32)[..., None]                     # (B,S,1)
+            log_a = log_a * pad_mask
         a = jnp.exp(log_a)
         gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
             i * u.astype(jnp.float32)
         )
+        if state is None and prefill_lengths is not None:
+            gated_in = gated_in * pad_mask
 
         if state is None:
             h = _lru_scan(a, gated_in)                           # (B,S,dr)
-            new_state = None
+            if prefill_lengths is not None:
+                tail = gather_conv_tail(
+                    u_raw, prefill_lengths, k - 1
+                )                                                # (B,K-1,dr)
+                new_state = (h[:, -1], tail)
+            else:
+                new_state = None
         else:
             h = a[:, 0] * lru_state + gated_in[:, 0]
             new_state = (h, new_conv)
@@ -200,7 +222,7 @@ class Griffin:
         out = peft_linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
         return x + out, new_state
 
-    def _attn_block(self, lp, la, x, rope, cache=None):
+    def _attn_block(self, lp, la, x, rope, cache=None, prefill_lengths=None):
         cfg = self.cfg
         b, s, _ = x.shape
         xn = rms_norm(x, lp["ln"], cfg.norm_eps)
@@ -218,7 +240,24 @@ class Griffin:
             out = blockwise_causal_attention(
                 q, kk, v, q_block=cfg.q_block, window=cfg.local_window
             )
-            new_cache = None
+            if prefill_lengths is not None:
+                # Build the decode ring buffer: slot j holds the newest
+                # position p < len with p % w == j (exactly what sequential
+                # decode writes would have left behind).
+                w = cfg.local_window
+                last = (prefill_lengths - 1)[:, None]            # (B,1)
+                p = last - ((last - jnp.arange(w)[None, :]) % w) # (B,w)
+                valid = p >= 0
+                b_idx = jnp.arange(b)[:, None]
+                pc = jnp.clip(p, 0, s - 1)
+                k_ring = jnp.where(
+                    valid[..., None, None], kk[b_idx, pc], 0
+                )                                                # (B,w,KV,hd)
+                v_ring = jnp.where(valid[..., None, None], v[b_idx, pc], 0)
+                pos_ring = jnp.where(valid, p, -1).astype(jnp.int32)
+                new_cache = (k_ring, v_ring, pos_ring)
+            else:
+                new_cache = None
         else:
             k_ring, v_ring, pos_ring, new_len = cache            # ring buffer
             w = cfg.local_window
@@ -249,8 +288,24 @@ class Griffin:
         return x + out, new_cache
 
     # --------------------------------------------------------------- forward
-    def _macro(self, bp, ba, x, rope, caches=None):
+    def _macro(self, bp, ba, x, rope, caches=None, prefill_lengths=None):
         """One (rec, mlp, rec, mlp, attn, mlp) macro-block."""
+        if caches is None and prefill_lengths is not None:
+            pl = prefill_lengths
+            x, (lru1, conv1) = self._rec_block(
+                bp["rec1"], get_subtree(ba, "rec1"), x, prefill_lengths=pl
+            )
+            x = self._mlp(bp["mlp1"], get_subtree(ba, "mlp1"), x)
+            x, (lru2, conv2) = self._rec_block(
+                bp["rec2"], get_subtree(ba, "rec2"), x, prefill_lengths=pl
+            )
+            x = self._mlp(bp["mlp2"], get_subtree(ba, "mlp2"), x)
+            x, (k_r, v_r, pos_r) = self._attn_block(
+                bp["attn"], get_subtree(ba, "attn"), x, rope,
+                prefill_lengths=pl,
+            )
+            x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
+            return x, (lru1, conv1, lru2, conv2, k_r, v_r, pos_r)
         if caches is None:
             x, _ = self._rec_block(bp["rec1"], get_subtree(ba, "rec1"), x)
             x = self._mlp(bp["mlp1"], get_subtree(ba, "mlp1"), x)
@@ -275,6 +330,18 @@ class Griffin:
         x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
         return x, (lru1, conv1, lru2, conv2, k_r, v_r, pos_r)
 
+    def _constrain_residual(self, x):
+        """§Perf D: sequence-parallel residual constraint between macro
+        blocks (reduce-scatter + all-gather instead of all-reduce)."""
+        cfg = self.cfg
+        if cfg.seq_parallel_residual and cfg.dp_axes and \
+                x.shape[1] % 16 == 0:
+            from jax.sharding import PartitionSpec as P
+            return jax.lax.with_sharding_constraint(
+                x, P(tuple(cfg.dp_axes), "model", None)
+            )
+        return x
+
     def _hidden(self, params, batch, peft=None):
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
@@ -282,19 +349,10 @@ class Griffin:
         rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
         block_adapters = (peft or {}).get("blocks", {})
 
-        def constrain(x):
-            if cfg.seq_parallel_residual and cfg.dp_axes and \
-                    x.shape[1] % 16 == 0:
-                from jax.sharding import PartitionSpec as P
-                return jax.lax.with_sharding_constraint(
-                    x, P(tuple(cfg.dp_axes), "model", None)
-                )
-            return x
-
         def body(x, xs):
             bp, ba = xs
             x, _ = self._macro(bp, ba, x, rope)
-            return constrain(x), None
+            return self._constrain_residual(x), None
 
         body_fn = jax.checkpoint(body) if cfg.remat else body
         x, _ = jax.lax.scan(body_fn, x, (params["blocks"], block_adapters))
@@ -347,10 +405,80 @@ class Griffin:
             cache[f"tail_conv{i + 1}"] = jnp.zeros((batch, km, dr), dt)
         return cache
 
-    def prefill(self, params, peft, batch):
-        logits, _ = self.forward(params, batch, peft, last_only=True)
-        cache = self.init_cache(batch["tokens"].shape[0],
-                                batch["tokens"].shape[1])
+    def cache_spec(self) -> Dict[str, CacheLeafSpec]:
+        """Slot layout of ``init_cache`` leaves (see CacheLeafSpec)."""
+        spec = {
+            "lru1": CacheLeafSpec(slot_axis=1),
+            "conv1": CacheLeafSpec(slot_axis=1),
+            "lru2": CacheLeafSpec(slot_axis=1),
+            "conv2": CacheLeafSpec(slot_axis=1),
+            "k": CacheLeafSpec(slot_axis=1),
+            "v": CacheLeafSpec(slot_axis=1),
+            "pos": CacheLeafSpec(slot_axis=1, fill=-1),
+            "len": CacheLeafSpec(slot_axis=0),
+        }
+        for i in range(self.n_tail):
+            spec[f"tail_lru{i + 1}"] = CacheLeafSpec(slot_axis=0)
+            spec[f"tail_conv{i + 1}"] = CacheLeafSpec(slot_axis=0)
+        return spec
+
+    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None):
+        """Scatter a prefill wave's O(1) recurrent states + local-attention
+        ring buffers into the given cache slots."""
+        return insert_cache_slots(
+            self.cache_spec(), cache, slot_ids, prefill_cache, lengths
+        )
+
+    def prefill(self, params, peft, batch, lengths=None):
+        """Batched prefill: one full-sequence pass that returns each row's
+        last-real-position logits plus a decode-ready cache (final LRU and
+        conv states, windowed-attention ring buffers).  ``lengths`` (B,)
+        marks per-row prompt lengths for right-padded waves."""
+        cfg = self.cfg
+        toks = batch["tokens"]
+        b, s = toks.shape
+        lens = (
+            jnp.full((b,), s, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32)
+        )
+        dt = cfg.param_dtype
+        x = params["embed"]["tokens"][toks].astype(cfg.compute_dtype)
+        rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
+        block_adapters = (peft or {}).get("blocks", {})
+
+        def body(x, xs):
+            bp, ba = xs
+            x, st = self._macro(bp, ba, x, rope, prefill_lengths=lens)
+            return self._constrain_residual(x), st
+
+        x, (lru1, conv1, lru2, conv2, k_r, v_r, pos_r) = jax.lax.scan(
+            body, x, (params["blocks"], block_adapters)
+        )
+        cache = {
+            "lru1": lru1,
+            "conv1": conv1.astype(dt),
+            "lru2": lru2,
+            "conv2": conv2.astype(dt),
+            "k": k_r.astype(dt),
+            "v": v_r.astype(dt),
+            "pos": pos_r,
+            "len": lens,
+        }
+        tail_adapters = (peft or {}).get("tail", {})
+        for i in range(self.n_tail):
+            tp = params["tail"]
+            x, (lru_t, conv_t) = self._rec_block(
+                tp[f"rec{i + 1}"], get_subtree(tail_adapters, f"rec{i + 1}"),
+                x, prefill_lengths=lens,
+            )
+            x = self._mlp(
+                tp[f"mlp{i + 1}"], get_subtree(tail_adapters, f"mlp{i + 1}"), x
+            )
+            cache[f"tail_lru{i + 1}"] = lru_t
+            cache[f"tail_conv{i + 1}"] = conv_t.astype(dt)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        x = x[jnp.arange(b), lens - 1][:, None]                  # (B,1,d)
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
         return logits, cache
 
     def decode_step(self, params, peft, cache, batch):

@@ -29,11 +29,14 @@ import jax.numpy as jnp
 
 from repro.core.peft import get_adapter, peft_linear
 from repro.models.common import (
+    CacheLeafSpec,
     ModelConfig,
     cross_entropy_loss,
     dense_init,
     embed_init,
     fused_cross_entropy,
+    gather_conv_tail,
+    insert_cache_slots,
     rms_norm,
 )
 from repro.models.transformer import _mask_vocab_pad, get_subtree, padded_vocab
@@ -124,9 +127,11 @@ class Mamba2:
         return jax.nn.silu(out + lp["conv_b"][None, None, :])
 
     # ------------------------------------------------------------ SSD (dual)
-    def _ssd_chunked(self, x, dt, a, b_mat, c_mat):
+    def _ssd_chunked(self, x, dt, a, b_mat, c_mat, return_final=False):
         """Chunked SSD.  x (B,S,H,hd); dt (B,S,H); a (H,) negative;
-        b/c (B,S,G,hs).  Returns y (B,S,H,hd)."""
+        b/c (B,S,G,hs).  Returns y (B,S,H,hd), or ``(y, final_state)``
+        with the fp32 (B,H,hs,hd) state after the last position when
+        ``return_final`` (prefill -> decode handoff)."""
         cfg = self.cfg
         bsz, s, h, hd = x.shape
         q = min(cfg.ssm_chunk, s)
@@ -157,7 +162,6 @@ class Mamba2:
         # 2. chunk-final states
         dac_cum = jnp.cumsum(dac, axis=2)                        # (B,nc,q,H)
         decay_to_end = jnp.exp(dac_cum[:, :, -1:, :] - dac_cum)  # (B,nc,q,H)
-        bx = jnp.repeat(bc, hg, axis=3) if g != h else bc
         states = jnp.einsum(
             "bcqhn,bcqhd->bchnd",
             (jnp.repeat(bc, hg, axis=3) * decay_to_end[..., None]).astype(x.dtype),
@@ -192,10 +196,12 @@ class Mamba2:
             (cx * decay_in[..., None]).astype(x.dtype), h_prev,
         )
         y = (y_diag + y_off).reshape(bsz, s, h, hd)
+        if return_final:
+            return y, hidden[:, -1]                          # (B,H,hs,hd) fp32
         return y
 
     # ------------------------------------------------------------ layer body
-    def _layer(self, lp, la, x, cache=None):
+    def _layer(self, lp, la, x, cache=None, prefill_lengths=None):
         cfg = self.cfg
         bsz, s, d = x.shape
         h, hd, hs = self.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
@@ -205,7 +211,8 @@ class Mamba2:
 
         new_cache = None
         if cache is None:
-            xbc = self._conv(lp, xbc)
+            xbc_raw = xbc                 # pre-conv: what the decode conv
+            xbc = self._conv(lp, xbc)     # window stores between steps
         else:
             ssm_state, conv_state = cache                        # (B,H,hs,hd), (B,K-1,conv)
             window = jnp.concatenate([conv_state, xbc], axis=1)  # (B,K,conv)
@@ -221,7 +228,23 @@ class Mamba2:
         dt = jax.nn.softplus(dt_raw.astype(jnp.float32))         # (B,S,H)
         a = -jnp.exp(lp["a_log"].astype(jnp.float32))            # (H,)
 
-        if cache is None:
+        if cache is None and prefill_lengths is not None:
+            # Right-padded prefill wave: zeroing dt at pad positions makes
+            # their state update the identity (decay exp(0)=1, input 0), so
+            # the scan's final state equals the state at each row's last
+            # real token — exactly what decode resumes from.
+            pad_mask = (
+                jnp.arange(s)[None, :] < prefill_lengths[:, None]
+            )                                                    # (B,S)
+            dt = dt * pad_mask[..., None]
+            y, ssm_final = self._ssd_chunked(
+                xs2, dt, a, b_mat, c_mat, return_final=True
+            )
+            tail = gather_conv_tail(
+                xbc_raw, prefill_lengths, cfg.conv_kernel - 1
+            )                                                    # (B,K-1,conv)
+            new_cache = (ssm_final, tail)
+        elif cache is None:
             y = self._ssd_chunked(xs2, dt, a, b_mat, c_mat)
         else:
             # recurrent step: h' = exp(dt*a) h + (dt*x) outer B ; y = C . h'
@@ -297,14 +320,51 @@ class Mamba2:
             "len": jnp.zeros((batch,), jnp.int32),
         }
 
-    def prefill(self, params, peft, batch):
-        # Prefill computes logits; final states are recovered by the engine
-        # via decode replay for the (rare) prefill->decode transition, or by
-        # the chunked scan returning final states (not needed in dry-run).
-        logits, _ = self.forward(params, batch, peft, last_only=True)
-        cache = self.init_cache(
-            batch["tokens"].shape[0], batch["tokens"].shape[1]
+    def cache_spec(self) -> Dict[str, CacheLeafSpec]:
+        """Slot layout of ``init_cache`` leaves (see CacheLeafSpec)."""
+        return {
+            "ssm": CacheLeafSpec(slot_axis=1),
+            "conv": CacheLeafSpec(slot_axis=1),
+            "len": CacheLeafSpec(slot_axis=0),
+        }
+
+    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None):
+        """Scatter a prefill wave's O(1) final states into cache slots."""
+        return insert_cache_slots(
+            self.cache_spec(), cache, slot_ids, prefill_cache, lengths
         )
+
+    def prefill(self, params, peft, batch, lengths=None):
+        """Batched prefill via the chunked dual form: returns the logits of
+        each row's last real position plus a decode-ready cache holding the
+        final SSM state and conv window (``lengths`` (B,) for right-padded
+        waves; ``None`` = full rows)."""
+        cfg = self.cfg
+        toks = batch["tokens"]
+        b, s = toks.shape
+        lens = (
+            jnp.full((b,), s, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32)
+        )
+        x = params["embed"]["tokens"][toks].astype(cfg.compute_dtype)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(x, xs):
+            lp, la = xs
+            x, st = self._layer(lp, la, x, prefill_lengths=lens)
+            return x, st
+
+        x, (ssm, conv) = jax.lax.scan(
+            body, x, (params["layers"], layer_adapters)
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        x = x[jnp.arange(b), lens - 1][:, None]                  # (B,1,d)
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+        cache = {
+            "ssm": ssm,
+            "conv": conv.astype(cfg.param_dtype),
+            "len": lens,
+        }
         return logits, cache
 
     def decode_step(self, params, peft, cache, batch):

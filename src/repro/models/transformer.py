@@ -19,12 +19,14 @@ import jax.numpy as jnp
 from repro.core.peft import get_adapter, peft_linear
 from repro.models.attention import blockwise_causal_attention, decode_attention
 from repro.models.common import (
+    CacheLeafSpec,
     ModelConfig,
     apply_rope,
     cross_entropy_loss,
     dense_init,
     embed_init,
     fused_cross_entropy,
+    insert_cache_slots,
     make_rope,
     rms_norm,
 )
@@ -184,7 +186,7 @@ class Transformer:
             jax.nn.silu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
         )
 
-    def _layer(self, lp, la, x, *, rope, cache=None):
+    def _layer(self, lp, la, x, *, rope, cache=None, no_drop=None):
         cfg = self.cfg
         h, new_kv = self._attn(
             lp["attn"], get_subtree(la, "attn"), rms_norm(x, lp["ln1"], cfg.norm_eps),
@@ -193,11 +195,13 @@ class Transformer:
         x = x + h
         hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
         if cfg.is_moe:
+            if no_drop is None:
+                no_drop = cache is not None   # serving never drops tokens
             out, aux = moe_ffn(
                 hn, lp["moe"],
                 n_experts=cfg.n_experts, top_k=cfg.top_k,
                 capacity_factor=cfg.capacity_factor,
-                no_drop=cache is not None,   # serving never drops tokens
+                no_drop=no_drop,
                 groups=cfg.moe_groups, dp_axes=cfg.dp_axes,
             )
         else:
@@ -300,11 +304,63 @@ class Transformer:
             "len": jnp.zeros((batch,), jnp.int32),
         }
 
-    def prefill(self, params, peft, batch):
-        """Prefill: fills the KV cache; returns last-position logits only."""
-        logits, _aux, cache = self.forward(
-            params, batch, peft, return_cache=True, last_only=True
+    def cache_spec(self) -> Dict[str, CacheLeafSpec]:
+        """Slot layout of ``init_cache`` leaves (see CacheLeafSpec)."""
+        return {
+            "k": CacheLeafSpec(slot_axis=1),
+            "v": CacheLeafSpec(slot_axis=1),
+            "len": CacheLeafSpec(slot_axis=0),
+        }
+
+    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None):
+        """Scatter a prefill wave's KV prefixes into the given cache slots.
+
+        ``prefill_cache`` rows ``[0, len(slot_ids))`` land in ``slot_ids``;
+        its (possibly shorter) sequence axis is written as a prefix — rows
+        past each request's length hold pad-token garbage, but
+        ``decode_attention`` masks by ``len`` and decode overwrites them in
+        order, so they are never read.
+        """
+        return insert_cache_slots(
+            self.cache_spec(), cache, slot_ids, prefill_cache, lengths
         )
+
+    def prefill(self, params, peft, batch, lengths=None):
+        """Batched prefill: fills the KV cache, returns the logits of each
+        row's last *real* position.
+
+        ``lengths`` (B,) gives per-row prompt lengths for right-padded
+        batches; ``None`` means every row uses the full sequence.  Causality
+        makes right padding exact for attention: positions ``< lengths[i]``
+        never attend to pad tokens, so the KV prefix and the gathered logits
+        are identical to an unpadded run.
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        b, s, _ = x.shape
+        rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
+        layer_adapters = (peft or {}).get("layers", {})
+        # Serving waves (lengths given) must not capacity-drop MoE tokens;
+        # the dry-run's bulk prefill lowering keeps the training dispatch.
+        no_drop = lengths is not None
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, la = xs
+            x, aux_i, kv = self._layer(lp, la, x, rope=rope, no_drop=no_drop)
+            return (x, aux + aux_i), kv
+
+        (x, _aux), (k, v) = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), (params["layers"], layer_adapters)
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if lengths is None:
+            lens = jnp.full((b,), s, jnp.int32)
+        else:
+            lens = jnp.asarray(lengths, jnp.int32)
+        x = x[jnp.arange(b), lens - 1][:, None]              # (B, 1, d)
+        logits = self._unembed(params, x)
+        cache = {"k": k, "v": v, "len": lens}
         return logits, cache
 
     def decode_step(self, params, peft, cache, batch):

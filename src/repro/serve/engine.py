@@ -5,16 +5,39 @@ production structure):
 
 * fixed ``n_slots`` decode batch; each slot owns a stripe of the KV/state
   cache,
-* admission by **prefill wave**: queued prompts are padded to a common
-  length, prefilled as one batch, and their caches inserted into free
-  slots (transformer fast path); recurrent/SSM families admit via decode
-  replay (their state is O(1) so replay is cheap),
+* admission by **prefill wave** (the fast path, default whenever the model
+  exposes ``prefill``): queued prompts are right-padded to a common bucketed
+  length, prefilled in ONE jitted call, and their cache stripes scattered
+  into free slots via the model's ``insert_cache`` — transformers scatter
+  KV prefixes, recurrent/SSM families scatter O(1) final states.  That is
+  O(1) jitted dispatches per wave instead of the O(max_prompt_len) decode
+  replay,
+* **decode-replay admission** is kept as an explicit fallback
+  (``admission="replay"``, or automatically for models without ``prefill``
+  / with non-token frontends): prompts replay token-by-token into the slot
+  stripes, batched across the wave,
 * one fused decode step per tick for all active slots (greedy sampling),
 * slots free on EOS/max-length; the queue backfills on the next tick.
+
+Cache surgery (freeing a slot, masking a replay wave, scattering a prefill
+wave) is driven by the model's declarative ``cache_spec()`` — a
+``CacheLeafSpec`` per cache leaf naming the slot axis and reset fill value
+(``repro.models.api.cache_slot_spec``) — never by shape/dtype guessing.
+Per-slot sequence lengths are tracked host-side from that spec's
+bookkeeping (admission sets them, each tick increments active slots), so
+steady-state decode performs no device->host cache reads.
+
+To bound recompilation, prefill waves are always padded to ``n_slots``
+rows and the token axis is bucketed to a multiple of ``seq_bucket``:
+at most ``max_len / seq_bucket`` distinct prefill shapes ever compile.
 
 Serving uses MERGED weights by default (paper §6: zero inference
 overhead); passing ``peft`` serves the adapter-attached model instead —
 numerically identical (tested).
+
+Follow-ons this structure enables (ROADMAP): paged KV cache (replace the
+dense slot stripes behind ``cache_spec``), multi-host sharded serving
+(shard the slot axis; admission/scatter already runs as one jitted call).
 """
 
 from __future__ import annotations
@@ -26,6 +49,8 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.models.common import merge_cache_slots, reset_cache_slots
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -50,6 +75,8 @@ class ServingEngine:
         *,
         n_slots: int = 4,
         max_len: int = 256,
+        admission: str = "auto",
+        seq_bucket: int = 16,
     ):
         self.model = model
         self.cfg = model.cfg
@@ -57,16 +84,43 @@ class ServingEngine:
         self.peft = peft
         self.n_slots = n_slots
         self.max_len = max_len
+        self.seq_bucket = seq_bucket
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.cache = model.init_cache(n_slots, max_len)
+        self.spec = model.cache_spec()
+        self._lengths = np.zeros((n_slots,), np.int32)   # host-side per slot
         self._last_token = np.zeros((n_slots,), np.int32)
+        # jitted-dispatch counters (benchmarks assert O(1) prefill admission)
+        self.stats: Dict[str, int] = {"decode_calls": 0, "prefill_calls": 0}
+
+        can_prefill = (
+            hasattr(model, "prefill") and self.cfg.frontend is None
+        )
+        if admission == "auto":
+            admission = "prefill" if can_prefill else "replay"
+        if admission not in ("prefill", "replay"):
+            raise ValueError(f"unknown admission mode {admission!r}")
+        if admission == "prefill" and not can_prefill:
+            raise ValueError(
+                f"model {self.cfg.name!r} cannot use prefill admission"
+            )
+        self.admission = admission
+
         self._decode = jax.jit(
             lambda cache, toks: model.decode_step(
                 params, peft, cache, {"tokens": toks}
             )
         )
-        self._transformer = hasattr(model, "prefill") and "k" in self.cache
+        self._prefill = (
+            jax.jit(
+                lambda toks, lens: model.prefill(
+                    params, peft, {"tokens": toks}, lengths=lens
+                )
+            )
+            if admission == "prefill"
+            else None
+        )
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request) -> None:
@@ -82,19 +136,56 @@ class ServingEngine:
         free = self._free_slots()
         if not free or not self.queue:
             return
-        wave = []
+        wave: List[Request] = []
         while self.queue and len(wave) < len(free):
             wave.append(self.queue.popleft())
-        # decode-replay admission: works uniformly for every model family
-        # (KV, SSM state, LRU state); prompts replay token-by-token into
-        # the slot's cache stripe.  O(prompt) decode steps per wave, batched
-        # across the wave's slots.
+        if self.admission == "prefill":
+            self._admit_prefill(free, wave)
+        else:
+            self._admit_replay(free, wave)
+
+    def _admit_prefill(self, free: Sequence[int], wave: List[Request]) -> None:
+        """Fast path: ONE jitted prefill over the right-padded wave, then
+        scatter the resulting cache stripes into the free slots."""
+        lengths = np.array([len(r.prompt) for r in wave], np.int32)
+        bucket = self.seq_bucket
+        s = min(-(-int(lengths.max()) // bucket) * bucket, self.max_len)
+        # fixed (n_slots, bucketed_s) shape: bounded compile count
+        toks = np.zeros((self.n_slots, s), np.int32)
+        lens = np.ones((self.n_slots,), np.int32)   # dummy rows: length 1
+        for row, req in enumerate(wave):
+            toks[row, : len(req.prompt)] = req.prompt
+            lens[row] = len(req.prompt)
+        logits, wave_cache = self._prefill(
+            jnp.asarray(toks), jnp.asarray(lens)
+        )
+        self.stats["prefill_calls"] += 1
+        slot_ids = np.asarray(free[: len(wave)], np.int32)
+        self.cache = self.model.insert_cache(
+            self.cache, slot_ids, wave_cache
+        )
+        first = np.asarray(
+            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32
+        )
+        for row, (slot, req) in enumerate(zip(free, wave)):
+            self.slots[slot] = req
+            self._lengths[slot] = lengths[row]
+            tok = int(first[row])
+            self._last_token[slot] = tok
+            req.output.append(tok)
+
+    def _admit_replay(self, free: Sequence[int], wave: List[Request]) -> None:
+        """Fallback: prompts replay token-by-token through ``decode_step``
+        into the slot's cache stripe — O(max_prompt_len) jitted dispatches
+        per wave, batched across the wave's slots."""
         max_p = max(len(r.prompt) for r in wave)
+        slot_ids = np.asarray(free[: len(wave)], np.int32)
+        self.cache = reset_cache_slots(self.spec, self.cache, slot_ids)
         for slot, req in zip(free, wave):
             self.slots[slot] = req
-            self._reset_slot(slot)
+            self._lengths[slot] = len(req.prompt)
         # replay: step all admitted slots together (inactive slots get pads
-        # but their cache stripes are masked by per-slot length resets).
+        # but their cache stripes are masked by the active-slot merge).
         for t in range(max_p):
             toks = np.zeros((self.n_slots, 1), np.int32)
             active = np.zeros((self.n_slots,), bool)
@@ -103,7 +194,10 @@ class ServingEngine:
                     toks[slot, 0] = req.prompt[t]
                     active[slot] = True
             logits, new_cache = self._decode(self.cache, jnp.asarray(toks))
-            self.cache = self._merge_cache(new_cache, active)
+            self.stats["decode_calls"] += 1
+            self.cache = merge_cache_slots(
+                self.spec, new_cache, self.cache, active
+            )
             for slot, req in zip(free, wave):
                 if t == len(req.prompt) - 1:
                     nxt = int(jnp.argmax(
@@ -111,33 +205,6 @@ class ServingEngine:
                     ))
                     self._last_token[slot] = nxt
                     req.output.append(nxt)
-
-    def _reset_slot(self, slot: int) -> None:
-        def zero_slot(x):
-            if x.ndim >= 2 and x.shape[1] == self.n_slots:
-                return x.at[:, slot].set(
-                    -1 if x.dtype == jnp.int32 and x.ndim == 3 else 0
-                )
-            if x.ndim >= 1 and x.shape[0] == self.n_slots:
-                return x.at[slot].set(0)
-            return x
-
-        self.cache = jax.tree_util.tree_map(zero_slot, self.cache)
-
-    def _merge_cache(self, new_cache, active: np.ndarray):
-        """Keep new cache only for active slots (replay wave masking)."""
-        act = jnp.asarray(active)
-
-        def pick(new, old):
-            if new.ndim >= 2 and new.shape[1] == self.n_slots:
-                sel = act.reshape((1, -1) + (1,) * (new.ndim - 2))
-            elif new.ndim >= 1 and new.shape[0] == self.n_slots:
-                sel = act.reshape((-1,) + (1,) * (new.ndim - 1))
-            else:
-                return new
-            return jnp.where(sel, new, old)
-
-        return jax.tree_util.tree_map(pick, new_cache, self.cache)
 
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
@@ -147,7 +214,10 @@ class ServingEngine:
             return
         toks = jnp.asarray(self._last_token.reshape(-1, 1))
         logits, new_cache = self._decode(self.cache, toks)
-        self.cache = self._merge_cache(new_cache, active)
+        self.stats["decode_calls"] += 1
+        self.cache = merge_cache_slots(
+            self.spec, new_cache, self.cache, active
+        )
         nxt = np.asarray(
             jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32
         )
@@ -157,10 +227,10 @@ class ServingEngine:
             tok = int(nxt[i])
             req.output.append(tok)
             self._last_token[i] = tok
-            cache_len = int(np.asarray(self.cache["len"])[i])
+            self._lengths[i] += 1
             if (req.eos_id is not None and tok == req.eos_id) or \
                     len(req.output) >= req.max_new_tokens or \
-                    cache_len >= self.max_len - 1:
+                    self._lengths[i] >= self.max_len - 1:
                 req.done = True
                 self.slots[i] = None
 

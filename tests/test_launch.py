@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, get_peft
 from repro.configs.shapes import DECODE_32K, TRAIN_4K
 from repro.launch.hlo_cost import hlo_cost, parse_hlo_computations
+from repro.launch.mesh import make_abstract_mesh
 from repro.launch.roofline import (
     active_param_count,
     model_flops,
@@ -29,8 +30,8 @@ from repro.models import build_model, cache_specs, param_specs
 
 def _abstract_mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

@@ -43,6 +43,49 @@ def test_engine_matches_reference_greedy(arch):
         assert r.output[:6] == ref, (r.uid, r.output, ref)
 
 
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b",
+                                  "mamba2-1.3b"])
+def test_admission_paths_equivalent(arch):
+    """Prefill-wave admission must produce IDENTICAL greedy outputs to
+    decode-replay admission: mixed prompt lengths inside a wave (padding
+    must be exact, not approximate) and more requests than slots (slot
+    churn across multiple waves, so freed-slot reset + scatter interact)."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[5, 9, 13], [40, 2], [7, 7, 7, 7, 21, 3, 99], [100, 101],
+               [1], [13, 5, 88, 4, 2], [250, 3, 17], [9] * 11]
+    outs = {}
+    for mode in ("replay", "prefill"):
+        engine = ServingEngine(model, params, n_slots=3, max_len=64,
+                               admission=mode)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        assert all(r.done for r in reqs)
+        outs[mode] = [r.output for r in reqs]
+    assert outs["prefill"] == outs["replay"]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b",
+                                  "mamba2-1.3b"])
+def test_prefill_admission_is_o1_dispatches(arch):
+    """A prefill wave admits in ONE jitted call regardless of prompt length
+    (replay admission needs max_prompt_len decode dispatches)."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, n_slots=2, max_len=64,
+                           admission="prefill")
+    for i in range(2):
+        engine.submit(Request(uid=i, prompt=[3 + i] * 20, max_new_tokens=1))
+    engine.step()
+    assert engine.stats["prefill_calls"] == 1
+    assert engine.stats["decode_calls"] == 1   # the tick's fused decode
+
+
 def test_engine_eos_and_backfill():
     cfg = get_smoke("qwen2-0.5b")
     model = build_model(cfg)
