@@ -44,6 +44,11 @@ VARIANTS = {
         ("A5_mb16_qblock256", "phi3-medium-14b", "train_4k",
          dict(cfg_overrides={"q_block": 256},
               shape_overrides={"microbatches": 16})),
+        ("A6_flash_attn", "phi3-medium-14b", "train_4k",
+         dict(cfg_overrides={"attn_backend": "pallas"})),
+        ("A7_flash_attn_mb16", "phi3-medium-14b", "train_4k",
+         dict(cfg_overrides={"attn_backend": "pallas"},
+              shape_overrides={"microbatches": 16})),
     ],
     "B": [
         ("B0_baseline", "minicpm-2b", "decode_32k", {}),
@@ -54,6 +59,9 @@ VARIANTS = {
               cfg_overrides={"fast_softmax": True})),
         ("B3_cache_seq_shard", "minicpm-2b", "decode_32k",
          dict(cache_seq_shard=True)),
+        ("B4_flash_decode", "minicpm-2b", "decode_32k",
+         dict(decode_shardings=True,
+              cfg_overrides={"attn_backend": "pallas"})),
     ],
     "C": [
         ("C0_baseline", "mixtral-8x7b", "train_4k", {}),
@@ -69,6 +77,8 @@ VARIANTS = {
          dict(cfg_overrides={"q_block": 1024})),
         ("C5_capacity1.0", "mixtral-8x7b", "train_4k",
          dict(cfg_overrides={"capacity_factor": 1.0})),
+        ("C6_flash_attn", "mixtral-8x7b", "train_4k",
+         dict(cfg_overrides={"attn_backend": "pallas"})),
     ],
 }
 

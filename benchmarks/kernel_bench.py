@@ -15,6 +15,7 @@ implementation does) for CPU-relative comparison.
 
 from __future__ import annotations
 
+import argparse
 import math
 import time
 
@@ -31,7 +32,9 @@ CASES = [
     ("qwen2_16-8-7", 896, (16, 8, 7)),
     ("phi3_16-8-8-5", 5120, (16, 8, 8, 5)),
 ]
+SMOKE_CASES = [("smoke_4-4-4", 64, (4, 4, 4))]
 ROWS = 2048
+SMOKE_ROWS = 64
 
 
 def traffic_model(d_in: int, d_out: int, n_tensors: int, rows: int,
@@ -49,16 +52,18 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps
 
 
-def main() -> list:
+def main(smoke: bool = False) -> list:
     out = []
-    for name, d, dims in CASES:
+    cases = SMOKE_CASES if smoke else CASES
+    rows = SMOKE_ROWS if smoke else ROWS
+    for name, d, dims in cases:
         ad = QuantaAdapter.create(jax.random.PRNGKey(0), d, dims_in=dims,
                                   init="normal")
-        x = jax.random.normal(jax.random.PRNGKey(1), (ROWS, d))
+        x = jax.random.normal(jax.random.PRNGKey(1), (rows, d))
         seq = jax.jit(lambda x: apply_sequential(
             x, ad.tensors, ad.dims_in, ad.pairs))
         t_seq = _time(seq, x)
-        staged, fused = traffic_model(d, ad.d_out, len(ad.tensors), ROWS)
+        staged, fused = traffic_model(d, ad.d_out, len(ad.tensors), rows)
         print(csv_row(
             f"kernel/seq_jnp/{name}", 1e6 * t_seq,
             f"hbm_staged_bytes={staged}",
@@ -76,4 +81,7 @@ def main() -> list:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes only (CI kernel-regression gate)")
+    main(smoke=ap.parse_args().smoke)

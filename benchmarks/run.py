@@ -7,6 +7,8 @@
     subspace          -> Fig. 2 / App. A (intrinsic-rank diagnostic)
     commonsense_proxy -> Tables 3-4 (joint multi-task fine-tuning)
     kernel_bench      -> Limitations section (fused chain vs sequential)
+    attention_bench   -> §Perf flash-attention kernel vs reference path
+                         (seq-len/window/GQA sweeps, visible-block ratio)
     roofline          -> EXPERIMENTS.md roofline table from dry-run records
     serve_bench       -> §6 zero-overhead serving: replay vs prefill-wave
                          admission latency + tokens/sec per model family
@@ -18,6 +20,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        attention_bench,
         commonsense_proxy,
         drop_proxy,
         fig4_sweep,
@@ -32,8 +35,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for mod in (param_efficiency, rte_proxy, drop_proxy, fig4_sweep,
-                subspace, commonsense_proxy, kernel_bench, roofline,
-                serve_bench):
+                subspace, commonsense_proxy, kernel_bench, attention_bench,
+                roofline, serve_bench):
         try:
             mod.main()
         except Exception as e:  # noqa: BLE001

@@ -4,5 +4,15 @@ Validated in interpret mode on CPU (this container); Mosaic-compiled on
 real TPUs.  See EXPERIMENTS.md §Perf for the fusion napkin math.
 """
 
+from repro.kernels.dispatch import MASK_VALUE, on_cpu, resolve_interpret
+from repro.kernels.flash_attention import (
+    blockwise_reference_attention,
+    decode_visible_blocks,
+    flash_attention,
+    flash_decode_attention,
+    flash_decode_supported,
+    pad_to_q_block,
+    visible_block_fraction,
+)
 from repro.kernels.ops import quanta_apply_fused, quanta_linear_fused
 from repro.kernels.ref import quanta_apply_ref, quanta_linear_ref

@@ -1,0 +1,50 @@
+"""Kernel-backend dispatch shared by every Pallas kernel in this package.
+
+One place answers "are we on the CPU validation container or a real TPU?"
+so raw ``*_kernel_call`` entry points and the jit'd wrappers agree: on CPU
+the kernels run in Pallas interpret mode (numerics-exact emulation), on
+TPU they compile via Mosaic.  Callers can still force either mode with an
+explicit ``interpret=`` argument.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MASK_VALUE", "masked_softmax", "on_cpu", "resolve_interpret"]
+
+# The additive mask for attention logits.  Finite (not -inf) so masked
+# rows exp() to exactly 0.0 without NaN-producing inf-inf in the online
+# softmax rescale; shared by the reference paths and the flash kernels.
+MASK_VALUE = -1e30
+
+
+def masked_softmax(scores: jnp.ndarray, value_dtype,
+                   fast: bool) -> jnp.ndarray:
+    """Row softmax of already-masked fp32 ``scores``, cast for the PV
+    matmul.
+
+    ``fast=True`` is the §Perf ``fast_softmax`` trade: fp32 row
+    statistics but the exp/probs tensor in the value dtype (halves the
+    dominant score-tensor traffic).  One implementation keeps the
+    reference prefill, reference decode, and Griffin ring-buffer paths
+    numerically aligned.
+    """
+    if fast:
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m).astype(value_dtype)
+        denom = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        return e / denom.astype(value_dtype)
+    return jax.nn.softmax(scores, axis=-1).astype(value_dtype)
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto (interpret on CPU, Mosaic on TPU)."""
+    return on_cpu() if interpret is None else interpret

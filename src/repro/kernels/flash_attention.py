@@ -1,0 +1,538 @@
+"""Tiled Pallas flash-attention kernel with masked-block skipping.
+
+The hottest op of every QuanTA fine-tuning and serving step is causal
+attention.  The pure-JAX reference path (``models/attention.py``) computes
+the full score row per query block and masks, so the compiled FLOPs
+include the whole masked upper triangle and the fp32 score tensor is the
+dominant HBM-traffic term of the roofline.  This kernel fuses the row
+into VMEM and *skips* KV blocks that the causal (and sliding-window) mask
+fully hides:
+
+* grid ``(B, H, n_q_blocks, n_kv_blocks)`` with the KV dimension minor —
+  the fp32 running max / denominator / output accumulator live in VMEM
+  scratch that persists across the KV steps of one ``(b, h, i)`` row,
+* online softmax: fp32 row statistics, probabilities cast to the value
+  dtype for the PV matmul (the ``fast_softmax`` trade made structural —
+  the score tensor never exists in HBM at all),
+* **masked-block skipping**: for query block ``i`` only KV blocks in
+  ``[j_lo(i), j_hi(i)]`` are computed — ``j_hi`` from causality, ``j_lo``
+  from the sliding window.  Out-of-range grid steps predicate off all
+  compute (``pl.when``) and their index maps clamp into the visible range
+  so no new block is fetched: compiled FLOPs and HBM reads drop by the
+  masked-block fraction (~2x for causal self-attention, ``window/S`` for
+  windowed layers),
+* GQA layout: ``q (B, S, H, hd)`` with ``k/v (B, S, KV, hd)`` shared via
+  the index map (``h // group``) — no KV duplication in HBM or VMEM.
+
+Differentiation: the fused forward is wrapped in ``jax.custom_vjp``; the
+backward recomputes attention blockwise in pure JAX (flash-style
+recompute, numerically identical to the reference path) so training can
+route through the kernel without a hand-written backward kernel.  A
+Mosaic backward kernel is a recorded follow-up.
+
+The decode variant (``flash_decode_attention``) handles ``q_len == 1``
+over a per-slot ``cache_len``-masked KV cache: the length is dynamic, so
+blocks past ``cache_len`` (and, with a window, before the window start)
+are predicated off rather than grid-skipped; the serving engine's dense
+per-slot cache keeps the index maps static.
+
+Interpret-on-CPU / Mosaic-on-TPU dispatch matches ``kernels/ops.py``
+(``interpret=None`` auto-detects via ``dispatch.on_cpu``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dispatch import MASK_VALUE, masked_softmax, resolve_interpret
+
+__all__ = [
+    "flash_attention",
+    "flash_decode_attention",
+    "flash_decode_supported",
+    "blockwise_reference_attention",
+    "pad_to_q_block",
+    "visible_block_fraction",
+    "decode_visible_blocks",
+]
+
+# Running-statistic scratch is kept (bq, _STATS_LANES) and broadcast on
+# store: TPU vector lanes are 128 wide, a (bq, 1) buffer would not tile.
+_STATS_LANES = 128
+
+
+# ---------------------------------------------------------------------------
+# Block-visibility accounting (shared by the kernel grid and the roofline)
+# ---------------------------------------------------------------------------
+
+def _visible_j_range(q_lo, bq: int, bk: int, n_k: int,
+                     window: Optional[int]):
+    """Inclusive KV-block range ``[j_lo, j_hi]`` visible to the query
+    block starting at ``q_lo``.  Works on Python ints (accounting) and
+    traced scalars (kernel body / index maps) alike."""
+    lo, hi = (max, min) if isinstance(q_lo, int) else (
+        jnp.maximum, jnp.minimum
+    )
+    j_hi = hi((q_lo + bq - 1) // bk, n_k - 1)
+    j_lo = 0 if window is None else lo(0, (q_lo - window + 1) // bk)
+    return j_lo, j_hi
+
+
+def visible_block_fraction(s: int, block_q: int, block_k: int,
+                           window: Optional[int] = None) -> float:
+    """Fraction of the ``n_q x n_k`` KV-block grid the kernel computes.
+
+    This is the exact FLOPs ratio flash/reference for one forward pass
+    (the reference path computes every block and masks); it feeds the
+    roofline's analytic attention accounting.
+    """
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    n_q = -(-s // bq)
+    n_k = -(-s // bk)
+    visible = 0
+    for i in range(n_q):
+        j_lo, j_hi = _visible_j_range(i * bq, bq, bk, n_k, window)
+        visible += max(0, j_hi - j_lo + 1)
+    return visible / float(n_q * n_k)
+
+
+def flash_decode_supported(s_max: int, block_k: int) -> bool:
+    """Can ``flash_decode_attention`` run over a dense cache of length
+    ``s_max``?  The single source of truth for the divisibility
+    requirement — the ``models/attention.py`` router falls back to the
+    reference path exactly when this is False."""
+    return s_max % min(block_k, s_max) == 0
+
+
+def decode_visible_blocks(s_max: int, block_k: int,
+                          window: Optional[int] = None) -> int:
+    """Upper bound on KV blocks one decode step computes (full cache when
+    dense; the window span + one boundary block when windowed)."""
+    bk = min(block_k, s_max)
+    n_k = -(-s_max // bk)
+    if window is None:
+        return n_k
+    return min(n_k, -(-window // bk) + 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel (train / prefill): q_len == kv_len, causal (+ window)
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, n_k: int, scale: float,
+                  window: Optional[int]):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = i * bq
+    j_lo, j_hi = _visible_j_range(q_lo, bq, bk, n_k, window)
+
+    @pl.when((j >= j_lo) & (j <= j_hi))
+    def _step():
+        q = q_ref[0, :, 0, :]                              # (bq, hd)
+        k = k_ref[0, :, 0, :]                              # (bk, hd)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (bq, bk) fp32
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = q_pos >= kv_pos
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # fp32 in VMEM
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+def _flash_forward(q, k, v, *, window, scale, block_q, block_k, interpret):
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad_q = (-s) % bq
+    pad_k = (-s) % bk
+    # Padded KV positions sit above every real query position, so the
+    # causal mask hides them; padded query rows are sliced off below.
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    n_q = (s + pad_q) // bq
+    n_k = (s + pad_k) // bk
+
+    def q_map(b_, h_, i, j):
+        return (b_, i, h_, 0)
+
+    def kv_map(b_, h_, i, j):
+        # Clamp out-of-range steps onto the visible span: the revisited
+        # block index issues no new fetch, so skipped steps cost neither
+        # DMA nor (predicated off) compute.
+        j_lo, j_hi = _visible_j_range(i * bq, bq, bk, n_k, window)
+        return (b_, jnp.clip(j, j_lo, j_hi), h_ // g, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, bq=bq, bk=bk, n_k=n_k, scale=scale, window=window
+        ),
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), q_map),
+            pl.BlockSpec((1, bk, 1, hd), kv_map),
+            pl.BlockSpec((1, bk, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _STATS_LANES), jnp.float32),   # running max
+            pltpu.VMEM((bq, _STATS_LANES), jnp.float32),   # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),             # out accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s] if pad_q else out
+
+
+# ---------------------------------------------------------------------------
+# Blockwise pure-JAX reference — the "reference" backend of
+# models/attention.py AND the kernel backward's recompute target (one
+# implementation, so the VJP cannot drift from the parity oracle)
+# ---------------------------------------------------------------------------
+
+def pad_to_q_block(s: int, q_block: int) -> tuple:
+    """Effective ``(q_block, padded_s)`` for a sequence of length ``s``.
+
+    The query axis is padded up to a multiple of ``q_block`` (output rows
+    are sliced off) instead of shrinking ``q_block`` to a divisor of
+    ``s`` — the old divisor fallback degraded to ``q_block=1`` (an
+    ``S``-step scan) for prime ``s``.
+    """
+    bq = min(q_block, s)
+    return bq, s + ((-s) % bq)
+
+
+def _block_attend(
+    q: jnp.ndarray,          # (B, Bq, KV, G, hd)
+    k: jnp.ndarray,          # (B, S, KV, hd)
+    v: jnp.ndarray,          # (B, S, KV, hd)
+    q_pos: jnp.ndarray,      # (Bq,) absolute positions of this query block
+    kv_pos: jnp.ndarray,     # (S,)  absolute positions of keys
+    window: Optional[int],
+    softmax_scale: float,
+    fast_softmax: bool,
+) -> jnp.ndarray:
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * softmax_scale                                   # (B, KV, G, Bq, S)
+    causal = q_pos[:, None] >= kv_pos[None, :]           # (Bq, S)
+    if window is not None:
+        causal &= q_pos[:, None] - kv_pos[None, :] < window
+    scores = jnp.where(causal[None, None, None], scores, MASK_VALUE)
+    probs = masked_softmax(scores, v.dtype, fast_softmax)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)     # (B, Bq, KV, G, hd)
+
+
+def blockwise_reference_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_block: int = 512,
+    window: Optional[int] = None,
+    pos_offset: int = 0,
+    fast_softmax: bool = False,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Pure-JAX causal attention scanned over query blocks.
+
+    Full score rows are computed and masked (the flash kernel's FLOPs
+    baseline); peak memory is O(q_block * S).  Returns ``(B, S, H, hd)``.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, s, kv, g, hd)
+    kv_pos = pos_offset + jnp.arange(s)
+
+    bq, s_pad = pad_to_q_block(s, q_block)
+    if s_pad != s:
+        qg = jnp.pad(qg, ((0, 0), (0, s_pad - s), (0, 0), (0, 0), (0, 0)))
+    n_blocks = s_pad // bq
+
+    if n_blocks == 1:
+        out = _block_attend(qg, k, v, kv_pos, kv_pos, window, scale,
+                            fast_softmax)
+        return out.reshape(b, s, h, hd)
+
+    qb = qg.reshape(b, n_blocks, bq, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    # Padded query rows get positions >= every kv position: fully causal-
+    # visible garbage rows, sliced off after the scan.
+    pos_b = (pos_offset + jnp.arange(s_pad)).reshape(n_blocks, bq)
+
+    def body(_, inputs):
+        q_i, pos_i = inputs
+        out_i = _block_attend(q_i, k, v, pos_i, kv_pos, window, scale,
+                              fast_softmax)
+        return None, out_i
+
+    _, out = jax.lax.scan(body, None, (qb, pos_b))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s_pad, h, hd)
+    return out[:, :s]
+
+
+class _FlashSpec(NamedTuple):
+    window: Optional[int]
+    scale: float
+    block_q: int
+    block_k: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_attention(spec: _FlashSpec, q, k, v):
+    return _flash_forward(
+        q, k, v, window=spec.window, scale=spec.scale,
+        block_q=spec.block_q, block_k=spec.block_k,
+        interpret=spec.interpret,
+    )
+
+
+def _flash_fwd(spec, q, k, v):
+    return _flash_attention(spec, q, k, v), (q, k, v)
+
+
+def _banded_recompute(q, k, v, *, block_q, window, scale):
+    """Backward recompute restricted to the visible KV band.
+
+    Like the kernel, each query block only touches KV positions in
+    ``[q_lo - window + 1, q_hi]`` — the masked upper triangle (and the
+    region left of the window) is never recomputed, so the backward's
+    FLOPs and score traffic shrink by the same visible fraction as the
+    forward's.  Query blocks are unrolled (band extents are static per
+    block); fine for the production ``S / q_block <= 8-64`` range.
+    Output is identical to ``blockwise_reference_attention`` — excluded
+    columns have exactly-zero probabilities and zero gradients.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    bq, s_pad = pad_to_q_block(s, block_q)
+    if s_pad != s:
+        qg = jnp.pad(qg, ((0, 0), (0, s_pad - s), (0, 0), (0, 0), (0, 0)))
+    outs = []
+    for i in range(s_pad // bq):
+        q_lo = i * bq
+        kv_hi = min(s, q_lo + bq)
+        kv_lo = 0 if window is None else max(0, q_lo - window + 1)
+        out_i = _block_attend(
+            qg[:, q_lo:q_lo + bq],
+            k[:, kv_lo:kv_hi], v[:, kv_lo:kv_hi],
+            q_lo + jnp.arange(bq), kv_lo + jnp.arange(kv_hi - kv_lo),
+            window, scale, False,
+        )
+        outs.append(out_i.reshape(b, bq, h, hd))
+    return jnp.concatenate(outs, axis=1)[:, :s]
+
+
+def _flash_bwd(spec, residuals, g):
+    # Flash-style recompute: no score tensor is saved between forward
+    # and backward; gradients are the VJP of a banded blockwise
+    # recompute that, like the kernel, skips fully-masked KV regions —
+    # so the training backward shares the forward's FLOPs/traffic
+    # savings (numerics identical to the reference backward).
+    q, k, v = residuals
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _banded_recompute(
+            q_, k_, v_, block_q=spec.block_q, window=spec.window,
+            scale=spec.scale,
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,               # (B, S, H, hd)
+    k: jnp.ndarray,               # (B, S, KV, hd)
+    v: jnp.ndarray,               # (B, S, KV, hd)
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    pos_offset: int = 0,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) flash attention.
+
+    Drop-in for the reference ``blockwise_causal_attention`` (same GQA
+    layout, same masking semantics); differentiable via a blockwise
+    recompute VJP.  ``pos_offset`` shifts queries and keys equally, so the
+    relative mask is unchanged — accepted for API parity.
+    Returns ``(B, S, H, hd)``.
+    """
+    del pos_offset
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    if h % kv:
+        raise ValueError(f"n_heads {h} must be a multiple of n_kv_heads {kv}")
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    spec = _FlashSpec(
+        window=window, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=resolve_interpret(interpret),
+    )
+    return _flash_attention(spec, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel: q_len == 1 over a per-slot length-masked KV cache
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, bk: int, n_k: int, scale: float,
+                   window: Optional[int]):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]                                 # this slot's len
+    q_pos = length - 1
+    # Per-slot skipping: the length is a runtime value, so out-of-range
+    # blocks are predicated off (the dense-cache index maps stay static;
+    # grid-level skipping needs the paged-cache follow-up).
+    should = j * bk < length
+    if window is not None:
+        should &= (j + 1) * bk > q_pos - window + 1
+
+    @pl.when(should)
+    def _step():
+        q = q_ref[0, 0]                                    # (G, hd)
+        k = k_ref[0, :, 0, :]                              # (bk, hd)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (G, bk)
+        kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < length
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+def flash_decode_attention(
+    q: jnp.ndarray,               # (B, 1, H, hd)
+    k_cache: jnp.ndarray,         # (B, S_max, KV, hd)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,       # (B,) valid entries (incl. the new token)
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Single-step flash attention over a dense KV cache.
+
+    Requires ``S_max % min(block_k, S_max) == 0`` (the serving engine's
+    bucketed cache shapes guarantee it; ``models/attention.py`` falls back
+    to the reference path otherwise rather than copy-pad the cache every
+    step).  Returns ``(B, 1, H, hd)``.
+    """
+    b, q_len, h, hd = q.shape
+    if q_len != 1:
+        raise ValueError(f"decode kernel expects q_len == 1, got {q_len}")
+    s_max = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    g = h // kv
+    bk = min(block_k, s_max)
+    if not flash_decode_supported(s_max, block_k):
+        raise ValueError(
+            f"cache length {s_max} not divisible by block_k {bk}"
+        )
+    n_k = s_max // bk
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kv, g, hd)
+    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, bk=bk, n_k=n_k, scale=scale, window=window
+        ),
+        grid=(b, kv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, k_, j: (b_, 0)),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, k_, j: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, k_, j: (b_, j, k_, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, k_, j: (b_, j, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, k_, j: (b_, k_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((g, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(lens, qg, k_cache, v_cache)
+    return out.reshape(b, 1, h, hd)

@@ -1,10 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Handles batching (arbitrary leading dims flattened to rows), row padding
-to the block size, the VMEM-budget dispatch between the fused-linear
-kernel and the XLA-matmul + fused-chain fallback, and interpret-mode
-selection (interpret=True on CPU — the container's validation mode; real
-TPUs compile the same kernels via Mosaic).
+to the block size, and the VMEM-budget dispatch between the fused-linear
+kernel and the XLA-matmul + fused-chain fallback.  Interpret-mode
+selection lives in the raw kernel calls (``dispatch.resolve_interpret``:
+interpret on CPU — the container's validation mode; real TPUs compile
+the same kernels via Mosaic).
 """
 
 from __future__ import annotations
@@ -25,10 +26,6 @@ __all__ = ["quanta_apply_fused", "quanta_linear_fused", "fused_vmem_ok"]
 VMEM_BUDGET_BYTES = 12 * 2**20  # ~12 MiB usable of 16 MiB v5e VMEM
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
 def _flatten_rows(x: jnp.ndarray, block_rows: int):
     batch = x.shape[:-1]
     rows = math.prod(batch) if batch else 1
@@ -47,8 +44,8 @@ def quanta_apply_fused(
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Fused chain application: drop-in for ``adapter.delta`` (tested
-    allclose against both oracles)."""
-    interpret = _on_cpu() if interpret is None else interpret
+    allclose against both oracles).  ``interpret=None`` resolves inside
+    the kernel call (interpret on CPU, Mosaic on TPU)."""
     xf, batch, rows = _flatten_rows(x, block_rows)
     tensors = [t.astype(x.dtype) for t in adapter.tensors]
     out = quanta_apply_kernel_call(
@@ -80,8 +77,8 @@ def quanta_linear_fused(
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Adapted linear ``x @ w + delta(x)``; fused when VMEM allows, else
-    XLA matmul + fused chain."""
-    interpret = _on_cpu() if interpret is None else interpret
+    XLA matmul + fused chain.  ``interpret=None`` resolves inside the
+    kernel call (interpret on CPU, Mosaic on TPU)."""
     d_in, d_out = w.shape
     if not fused_vmem_ok(d_in, d_out, adapter, block_rows, block_cols):
         return x @ w + quanta_apply_fused(

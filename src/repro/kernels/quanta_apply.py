@@ -29,11 +29,13 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import resolve_interpret
 
 __all__ = ["quanta_apply_kernel_call"]
 
@@ -79,9 +81,14 @@ def quanta_apply_kernel_call(
     pairs: Sequence[Tuple[int, int]],
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Raw pallas_call over row blocks.  ``rows % block_rows == 0``."""
+    """Raw pallas_call over row blocks.  ``rows % block_rows == 0``.
+
+    ``interpret=None`` auto-detects (interpret on CPU, Mosaic on TPU) so
+    TPU callers bypassing the ``ops.py`` wrappers don't silently run the
+    interpreter."""
+    interpret = resolve_interpret(interpret)
     rows, d_in = x.shape
     d_out = d_in
     cur = list(dims_in)

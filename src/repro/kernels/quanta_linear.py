@@ -21,13 +21,14 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.quanta_apply import _chain_block
 
 __all__ = ["quanta_linear_kernel_call"]
@@ -63,8 +64,11 @@ def quanta_linear_kernel_call(
     *,
     block_rows: int = 256,
     block_cols: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    # interpret=None auto-detects via dispatch.on_cpu (TPU callers
+    # bypassing the ops.py wrappers must not silently run interpret mode)
+    interpret = resolve_interpret(interpret)
     rows, d_in = x.shape
     d_out = w.shape[1]
     cur = list(dims_in)

@@ -81,7 +81,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         cfg = cfg.replace(moe_groups=dp_size, dp_axes=dp)
     elif cfg.seq_parallel_residual:
         cfg = cfg.replace(dp_axes=dp)
-    progs = build_programs(cfg, shape, dp_axes=dp)
+    cfg_lowered = cfg
+    if cfg.attn_backend == "pallas":
+        # The flash kernel is an opaque custom-call in TPU HLO (an
+        # interpreter loop on this CPU backend) — unparseable by
+        # hlo_cost either way.  Lower the reference program and let
+        # roofline_terms swap the attention terms analytically
+        # (attention_backend_adjustment), the same convention as the
+        # collective-bytes model.
+        cfg_lowered = cfg.replace(attn_backend="reference")
+    progs = build_programs(cfg_lowered, shape, dp_axes=dp)
 
     t0 = time.time()
     if shape.kind == "train":
@@ -139,7 +148,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # XLA's own cost_analysis() counts while (scan) bodies ONCE — useless
     # with scanned layers/microbatches; use the trip-count-aware parser and
     # keep the raw numbers for reference.
-    xla_cost = dict(compiled.cost_analysis() or {})
+    raw_cost = compiled.cost_analysis()
+    if isinstance(raw_cost, (list, tuple)):   # jax 0.4.x: [dict] per module
+        raw_cost = raw_cost[0] if raw_cost else {}
+    xla_cost = dict(raw_cost or {})
     cost = hlo_cost(hlo_text)
     coll = parse_collective_bytes(hlo_text)
     terms = roofline_terms(cfg, shape, n_chips, cost, coll)

@@ -26,6 +26,10 @@ import math
 import re
 from typing import Any, Dict, Optional
 
+from repro.kernels.flash_attention import (
+    decode_visible_blocks,
+    visible_block_fraction,
+)
 from repro.models.common import ModelConfig, ShapeConfig
 from repro.models.transformer import padded_vocab
 
@@ -35,6 +39,7 @@ __all__ = [
     "roofline_terms",
     "model_flops",
     "active_param_count",
+    "attention_backend_adjustment",
 ]
 
 # TPU v5e per chip
@@ -181,6 +186,100 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return body + head + attn_ctx
 
 
+def attention_backend_adjustment(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Optional[Dict[str, float]]:
+    """Analytic attention-term swap for ``cfg.attn_backend == "pallas"``.
+
+    The flash kernel is an opaque custom-call in TPU HLO (and an
+    interpreter loop on CPU), so — like collective bytes — its cost
+    cannot be parsed from the compiled text.  The dry-run therefore
+    lowers the reference program and this function swaps the attention
+    terms analytically: masked KV blocks the kernel skips stop being
+    billed as compute, and the score/probs tensors (VMEM-resident in the
+    kernel) stop being billed as HBM traffic.
+
+    Modeled per attention layer and forward pass:
+
+    * reference FLOPs: ``4 * H * hd`` per (q, kv) pair over ALL ``S^2``
+      pairs (the reference computes full rows and masks),
+    * flash FLOPs: the same rate over visible-block pairs only
+      (``kernels.flash_attention.visible_block_fraction`` — exact for
+      the kernel's grid),
+    * score traffic saved: fp32 scores + probs write+read per pair
+      (probs at bf16 when ``fast_softmax`` — the knob the kernel
+      subsumes); the q/k/v/out tensor reads are common to both backends
+      and cancel.
+
+    Training swaps the two forward instances (loss + remat) AND bills
+    the kernel's custom-VJP recompute — one extra banded forward (at
+    the visible fraction) plus its banded score traffic — that the
+    reference autodiff does not run.  The banded backward's own matmul
+    savings vs the reference backward are real but conservatively NOT
+    billed.  Returns ``None`` when the backend is "reference", the
+    family has no attention layers, or (hybrid decode) the model never
+    routes through the kernel.
+    """
+    if cfg.attn_backend != "pallas" or cfg.family == "ssm":
+        return None
+    b, s = shape.global_batch, shape.seq_len
+    h, hd = cfg.n_heads, cfg.head_dim
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_period
+        window = cfg.local_window
+    else:
+        n_attn = cfg.n_layers
+        window = cfg.sliding_window
+
+    if shape.kind == "decode":
+        if cfg.family == "hybrid":
+            # Griffin decode attends over its local_window ring buffer
+            # (models/griffin.py) and never routes through the flash
+            # decode kernel — nothing to swap.
+            return None
+        fwd_passes = 1
+        bk = min(cfg.kv_block, s)
+        ref_pairs = float(b * s)            # 1 query row over the cache
+        flash_pairs = float(
+            b * min(s, decode_visible_blocks(s, cfg.kv_block, window) * bk)
+        )
+        visible_fraction = flash_pairs / ref_pairs
+    else:
+        fwd_passes = 2 if shape.kind == "train" else 1
+        bq = min(cfg.q_block, s)
+        bk = min(cfg.kv_block, s)
+        n_q, n_k = -(-s // bq), -(-s // bk)
+        visible_fraction = visible_block_fraction(
+            s, cfg.q_block, cfg.kv_block, window
+        )
+        ref_pairs = float(b * s * s)
+        flash_pairs = float(b) * visible_fraction * (n_q * bq) * (n_k * bk)
+
+    per_pair_flops = 4.0 * h * hd           # QK^T + PV, per head group row
+    ref_flops = fwd_passes * n_attn * per_pair_flops * ref_pairs
+    flash_flops = fwd_passes * n_attn * per_pair_flops * flash_pairs
+    probs_bytes = 2 if cfg.fast_softmax else 4
+    score_instance = n_attn * float(h) * ref_pairs * 2.0 * (4 + probs_bytes)
+    if shape.kind == "train":
+        # the custom-VJP backward recomputes one banded forward the
+        # reference autodiff does not: bill its FLOPs and its banded
+        # score traffic against the win.
+        recompute_flops = n_attn * per_pair_flops * flash_pairs
+        bytes_saved = (fwd_passes - visible_fraction) * score_instance
+    else:
+        recompute_flops = 0.0
+        bytes_saved = fwd_passes * score_instance
+    return {
+        "visible_block_fraction": visible_fraction,
+        "fwd_passes": fwd_passes,
+        "ref_attn_flops": ref_flops,
+        "flash_attn_flops": flash_flops,
+        "recompute_flops_billed": recompute_flops,
+        "flops_saved": ref_flops - flash_flops - recompute_flops,
+        "score_bytes_saved": bytes_saved,
+    }
+
+
 def roofline_terms(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -194,6 +293,13 @@ def roofline_terms(
     # is per-device work / per-chip rate.
     hlo_flops_dev = float(cost.get("flops", 0.0))
     hlo_bytes_dev = float(cost.get("bytes accessed", 0.0))
+    adj = attention_backend_adjustment(cfg, shape)
+    if adj is not None:
+        # per-device program: global analytic savings / chips
+        hlo_flops_dev = max(0.0, hlo_flops_dev - adj["flops_saved"] / n_chips)
+        hlo_bytes_dev = max(
+            0.0, hlo_bytes_dev - adj["score_bytes_saved"] / n_chips
+        )
     coll_per_device = float(sum(collective_bytes.values()))
     t_compute = hlo_flops_dev / HW["peak_flops"]
     t_memory = hlo_bytes_dev / HW["hbm_bw"]
@@ -208,6 +314,8 @@ def roofline_terms(
     hlo_flops_global = hlo_flops_dev * n_chips
     return {
         **terms,
+        "attn_backend": cfg.attn_backend,
+        "attn_adjustment": adj,
         "dominant": dominant.replace("_s", ""),
         "hlo_flops_per_device": hlo_flops_dev,
         "hlo_flops": hlo_flops_global,

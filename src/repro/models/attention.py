@@ -1,61 +1,59 @@
-"""Attention: blockwise-causal (flash-style, pure JAX) + decode paths.
+"""Attention: blockwise-causal + decode paths behind a backend knob.
 
-The training/prefill path never materializes the full ``(S, S)`` score
-matrix: queries are processed in blocks of ``q_block`` via ``lax.scan``, so
-peak memory is ``B * H * q_block * S_kv`` — the structural property that
-lets the 32k-prefill shapes fit HBM in the dry-run.  A Pallas flash kernel
-that additionally skips fully-masked KV blocks is a recorded §Perf
-hillclimb; this reference path computes the full row per query block and
-masks (the compiled FLOPs therefore include the masked upper triangle —
-accounted for in the roofline's MODEL_FLOPS/HLO_FLOPs ratio).
+Two backends, selected per call (models thread ``cfg.attn_backend``):
 
-GQA layout: ``q (B, S, H, hd)``, ``k/v (B, S, KV, hd)`` with ``H % KV == 0``;
-queries are grouped as ``(B, S, KV, G, hd)`` so no KV duplication happens.
+* ``backend="reference"`` — the pure-JAX flash-style path
+  (``kernels.flash_attention.blockwise_reference_attention``, one
+  implementation shared with the kernel's recompute VJP).  Queries are
+  processed in blocks of ``q_block`` via ``lax.scan``, so peak memory is
+  ``B * H * q_block * S_kv``; the full score row per query block is
+  computed and masked, so the compiled FLOPs include the masked upper
+  triangle (accounted in the roofline's MODEL_FLOPS/HLO_FLOPs ratio).
+  Kept as the numerics oracle for parity tests and for shapes the kernel
+  declines (e.g. a decode cache whose length the KV block doesn't
+  divide).
+* ``backend="pallas"`` — the fused Pallas flash kernel
+  (``kernels/flash_attention.py``): online softmax with fp32 running
+  statistics in VMEM and **masked-block skipping**, so fully-hidden KV
+  blocks cost neither FLOPs nor HBM traffic (~2x for causal prefill,
+  ``window/S`` for sliding-window layers).  Interpret-mode on CPU,
+  Mosaic-compiled on TPU; differentiable via a blockwise recompute VJP.
+
+GQA layout: ``q (B, S, H, hd)``, ``k/v (B, S, KV, hd)`` with
+``H % KV == 0``; queries are grouped as ``(B, S, KV, G, hd)`` so no KV
+duplication happens in either backend.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-__all__ = ["blockwise_causal_attention", "decode_attention"]
+from repro.kernels.dispatch import MASK_VALUE, masked_softmax
+from repro.kernels.flash_attention import (
+    blockwise_reference_attention,
+    flash_attention,
+    flash_decode_attention,
+    flash_decode_supported,
+)
+
+__all__ = [
+    "MASK_VALUE",
+    "blockwise_causal_attention",
+    "decode_attention",
+]
+
+_BACKENDS = ("reference", "pallas")
 
 
-def _block_attend(
-    q: jnp.ndarray,          # (B, Bq, KV, G, hd)
-    k: jnp.ndarray,          # (B, S, KV, hd)
-    v: jnp.ndarray,          # (B, S, KV, hd)
-    q_pos: jnp.ndarray,      # (Bq,) absolute positions of this query block
-    kv_pos: jnp.ndarray,     # (S,)  absolute positions of keys
-    kv_len: Optional[jnp.ndarray],  # (B,) valid kv length (decode) or None
-    window: Optional[int],
-    softmax_scale: float,
-    fast_softmax: bool = False,
-) -> jnp.ndarray:
-    scores = jnp.einsum(
-        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
-    ) * softmax_scale                                   # (B, KV, G, Bq, S)
-    causal = q_pos[:, None] >= kv_pos[None, :]           # (Bq, S)
-    if window is not None:
-        causal &= q_pos[:, None] - kv_pos[None, :] < window
-    mask = causal[None, None, None]
-    if kv_len is not None:
-        valid = kv_pos[None, :] < kv_len[:, None]        # (B, S)
-        mask = mask & valid[:, None, None, None, :]
-    scores = jnp.where(mask, scores, -1e30)
-    if fast_softmax:
-        # §Perf hillclimb: fp32 row statistics, bf16 exp/probs tensor —
-        # halves the dominant score-tensor traffic vs fp32 softmax.
-        m = jnp.max(scores, axis=-1, keepdims=True)
-        e = jnp.exp((scores - m)).astype(v.dtype)
-        denom = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
-        probs = (e / denom.astype(v.dtype))
-    else:
-        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
-    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)     # (B, Bq, KV, G, hd)
+def _check_backend(backend: str) -> None:
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"unknown attention backend {backend!r}; expected one of "
+            f"{_BACKENDS}"
+        )
 
 
 def blockwise_causal_attention(
@@ -64,45 +62,32 @@ def blockwise_causal_attention(
     v: jnp.ndarray,
     *,
     q_block: int = 512,
+    kv_block: Optional[int] = None,
     window: Optional[int] = None,
     pos_offset: int = 0,
     fast_softmax: bool = False,
+    backend: str = "reference",
 ) -> jnp.ndarray:
     """Causal (optionally sliding-window) attention, O(q_block * S) memory.
 
-    Returns ``(B, S, H, hd)``.
+    ``backend="pallas"`` routes to the fused flash kernel (``kv_block``
+    sets its KV tile, defaulting to ``q_block``); ``"reference"`` runs
+    the pure-JAX blockwise path.  Returns ``(B, S, H, hd)``.
     """
-    b, s, h, hd = q.shape
+    _check_backend(backend)
+    h = q.shape[2]
     kv = k.shape[2]
     if h % kv:
         raise ValueError(f"n_heads {h} must be a multiple of n_kv_heads {kv}")
-    g = h // kv
-    scale = 1.0 / math.sqrt(hd)
-    qg = q.reshape(b, s, kv, g, hd)
-    kv_pos = pos_offset + jnp.arange(s)
-
-    q_block = min(q_block, s)
-    while s % q_block:           # largest divisor of s not exceeding q_block
-        q_block -= 1
-    n_blocks = s // q_block
-
-    if n_blocks == 1:
-        out = _block_attend(qg, k, v, kv_pos, kv_pos, None, window, scale,
-                            fast_softmax)
-        return out.reshape(b, s, h, hd)
-
-    qb = qg.reshape(b, n_blocks, q_block, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
-    pos_b = kv_pos.reshape(n_blocks, q_block)
-
-    def body(_, inputs):
-        q_i, pos_i = inputs
-        out_i = _block_attend(q_i, k, v, pos_i, kv_pos, None, window, scale,
-                              fast_softmax)
-        return None, out_i
-
-    _, out = jax.lax.scan(body, None, (qb, pos_b))
-    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
-    return out
+    if backend == "pallas":
+        return flash_attention(
+            q, k, v, window=window, block_q=q_block,
+            block_k=kv_block or q_block, pos_offset=pos_offset,
+        )
+    return blockwise_reference_attention(
+        q, k, v, q_block=q_block, window=window, pos_offset=pos_offset,
+        fast_softmax=fast_softmax,
+    )
 
 
 def decode_attention(
@@ -112,14 +97,29 @@ def decode_attention(
     cache_len: jnp.ndarray,   # (B,) number of valid entries (incl. new token)
     *,
     window: Optional[int] = None,
+    fast_softmax: bool = False,
+    kv_block: int = 512,
+    backend: str = "reference",
 ) -> jnp.ndarray:
-    """Single-step attention over a KV cache.  Returns ``(B, 1, H, hd)``."""
+    """Single-step attention over a KV cache.  Returns ``(B, 1, H, hd)``.
+
+    ``backend="pallas"`` routes to the flash decode kernel (per-slot
+    ``cache_len`` masking, blocks past the valid length predicated off);
+    it requires ``S_max`` divisible by the KV block, so non-divisible
+    cache shapes fall back to this reference path rather than copy-pad
+    the cache every step.
+    """
+    _check_backend(backend)
     b, _, h, hd = q.shape
     kv = k_cache.shape[2]
+    s_max = k_cache.shape[1]
+    if backend == "pallas" and flash_decode_supported(s_max, kv_block):
+        return flash_decode_attention(
+            q, k_cache, v_cache, cache_len, window=window, block_k=kv_block
+        )
     g = h // kv
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(b, 1, kv, g, hd)
-    s_max = k_cache.shape[1]
     kv_pos = jnp.arange(s_max)
     q_pos = cache_len - 1                                 # (B,)
 
@@ -129,7 +129,9 @@ def decode_attention(
     valid = kv_pos[None, :] < cache_len[:, None]          # (B, S)
     if window is not None:
         valid &= (q_pos[:, None] - kv_pos[None, :]) < window
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    scores = jnp.where(valid[:, None, None, None, :], scores, MASK_VALUE)
+    # fast_softmax: fp32 row statistics, value-dtype probs — parity with
+    # the prefill path's §Perf hillclimb knob.
+    probs = masked_softmax(scores, v_cache.dtype, fast_softmax)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
     return out.reshape(b, 1, h, hd)

@@ -80,8 +80,16 @@ class ModelConfig:
     compute_dtype: Any = jnp.float32
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
-    # attention blocking (pure-JAX flash-style)
+    # attention backend: "reference" = pure-JAX blockwise path,
+    # "pallas" = fused flash kernel with masked-block skipping
+    # (kernels/flash_attention.py; interpret on CPU, Mosaic on TPU).
+    # Threaded through train/prefill/decode by every attention family.
+    attn_backend: str = "reference"
+    # attention blocking: q_block tiles the query axis (both backends);
+    # kv_block is the flash kernel's KV tile (and the granularity at
+    # which fully-masked blocks are skipped)
     q_block: int = 512
+    kv_block: int = 512
     # §Perf hillclimb knob: keep attention probabilities in bf16 after an
     # fp32 row-max/denominator (halves score-tensor HBM traffic; the row
     # statistics stay fp32 so logsumexp accuracy is preserved)

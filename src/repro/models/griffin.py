@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.peft import get_adapter, peft_linear
-from repro.models.attention import blockwise_causal_attention
+from repro.kernels.dispatch import masked_softmax
+from repro.models.attention import MASK_VALUE, blockwise_causal_attention
 from repro.models.common import (
     CacheLeafSpec,
     ModelConfig,
@@ -238,7 +239,9 @@ class Griffin:
 
         if cache is None:
             out = blockwise_causal_attention(
-                q, kk, v, q_block=cfg.q_block, window=cfg.local_window
+                q, kk, v, q_block=cfg.q_block, kv_block=cfg.kv_block,
+                window=cfg.local_window, fast_softmax=cfg.fast_softmax,
+                backend=cfg.attn_backend,
             )
             if prefill_lengths is not None:
                 # Build the decode ring buffer: slot j holds the newest
@@ -277,8 +280,11 @@ class Griffin:
             valid = (pos_ring >= 0) & (pos_ring <= q_pos) & (
                 q_pos - pos_ring < w
             )                                                    # (B,W)
-            scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
-            probs = jax.nn.softmax(scores, axis=-1).astype(v_ring.dtype)
+            scores = jnp.where(valid[:, None, None, None, :], scores,
+                               MASK_VALUE)
+            # same masked_softmax as the prefill path, so prefill-wave
+            # and decode-replay admission stay numerically aligned
+            probs = masked_softmax(scores, v_ring.dtype, cfg.fast_softmax)
             out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_ring).reshape(
                 b, 1, cfg.n_heads, cfg.head_dim
             )

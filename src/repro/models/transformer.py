@@ -161,8 +161,9 @@ class Transformer:
 
         if cache is None:
             out = blockwise_causal_attention(
-                q, k, v, q_block=cfg.q_block, window=window,
-                fast_softmax=cfg.fast_softmax,
+                q, k, v, q_block=cfg.q_block, kv_block=cfg.kv_block,
+                window=window, fast_softmax=cfg.fast_softmax,
+                backend=cfg.attn_backend,
             )
             new_kv = (k, v)
         else:
@@ -172,7 +173,9 @@ class Transformer:
             k_cache = k_cache.at[b_idx, idx].set(k[:, 0])
             v_cache = v_cache.at[b_idx, idx].set(v[:, 0])
             out = decode_attention(
-                q, k_cache, v_cache, cache_len, window=window
+                q, k_cache, v_cache, cache_len, window=window,
+                fast_softmax=cfg.fast_softmax, kv_block=cfg.kv_block,
+                backend=cfg.attn_backend,
             )
             new_kv = (k_cache, v_cache)
         out = out.reshape(b, s, cfg.attn_dim)

@@ -1,0 +1,298 @@
+"""Flash-attention kernel validation (interpret mode): parity with the
+reference path across seq-len / window / GQA / dtype sweeps, decode
+equivalence, gradient parity through the recompute VJP, the q_block
+padding fix, and the roofline's masked-block FLOPs accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels.flash_attention import (
+    decode_visible_blocks,
+    pad_to_q_block,
+    visible_block_fraction,
+)
+from repro.models import build_model
+from repro.models.attention import (
+    MASK_VALUE,
+    blockwise_causal_attention,
+    decode_attention,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=3e-5, atol=3e-5
+    )
+
+
+def _qkv(s, h, kvh, hd, dtype=jnp.float32, b=2, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, hd)).astype(dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------- parity
+SWEEP = [
+    # (s, h, kvh, hd, window, q_block, kv_block)
+    (64, 4, 2, 16, None, 32, 32),
+    (64, 4, 4, 8, 24, 16, 16),       # MHA + window
+    (97, 4, 2, 16, None, 32, 32),    # prime S: padding path both sides
+    (50, 6, 3, 16, 16, 32, 16),      # uneven S, rectangular blocks
+    (33, 8, 1, 8, None, 64, 64),     # MQA, S < block
+    (64, 4, 2, 16, 1, 32, 32),       # degenerate window: self-only
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,kvh,hd,window,bq,bk", SWEEP)
+def test_flash_matches_reference(s, h, kvh, hd, window, bq, bk, dtype):
+    q, k, v = _qkv(s, h, kvh, hd, dtype)
+    ref = blockwise_causal_attention(q, k, v, q_block=bq, window=window)
+    out = blockwise_causal_attention(
+        q, k, v, q_block=bq, kv_block=bk, window=window, backend="pallas"
+    )
+    assert out.dtype == q.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_flash_grad_matches_reference():
+    q, k, v = _qkv(32, 4, 2, 8, b=1)
+    w = jax.random.normal(jax.random.PRNGKey(9), (1, 32, 4, 8))
+
+    def loss(backend):
+        def f(q, k, v):
+            o = blockwise_causal_attention(
+                q, k, v, q_block=16, backend=backend
+            )
+            return jnp.sum((o * w) ** 2)
+        return f
+
+    g_ref = jax.grad(loss("reference"), argnums=(0, 1, 2))(q, k, v)
+    g_fl = jax.grad(loss("pallas"), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_fl):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4
+        )
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_decode_matches_last_row_of_prefill(window, backend):
+    """Decoding the final token over the prefilled cache must equal the
+    last row of the full (flash or reference) prefill."""
+    s, h, kvh, hd = 48, 4, 2, 16
+    q, k, v = _qkv(s, h, kvh, hd)
+    full = blockwise_causal_attention(
+        q, k, v, q_block=16, kv_block=16, window=window, backend=backend
+    )
+    lens = jnp.full((q.shape[0],), s, jnp.int32)
+    dec = decode_attention(
+        q[:, -1:], k, v, lens, window=window, kv_block=16, backend=backend
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(full[:, -1]), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_decode_ragged_lengths_parity():
+    h, kvh, hd, s_max = 8, 4, 16, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (3, 1, h, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (3, s_max, kvh, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (3, s_max, kvh, hd))
+    lens = jnp.array([1, 37, 64], jnp.int32)
+    ref = decode_attention(q, kc, vc, lens)
+    fl = decode_attention(q, kc, vc, lens, kv_block=16, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(ref), np.asarray(fl), rtol=3e-5, atol=3e-5
+    )
+    # fast_softmax (fp32 stats / value-dtype probs) decode parity
+    fs = decode_attention(q, kc, vc, lens, fast_softmax=True)
+    np.testing.assert_allclose(
+        np.asarray(ref), np.asarray(fs), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_decode_non_divisible_cache_falls_back():
+    """A cache length the KV block doesn't divide routes to the reference
+    path (documented fallback) instead of erroring."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 8))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (2, 37, 2, 8))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (2, 37, 2, 8))
+    lens = jnp.array([5, 37], jnp.int32)
+    ref = decode_attention(q, kc, vc, lens)
+    out = decode_attention(q, kc, vc, lens, kv_block=16, backend="pallas")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_unknown_backend_raises():
+    q, k, v = _qkv(16, 2, 2, 8, b=1)
+    with pytest.raises(ValueError, match="backend"):
+        blockwise_causal_attention(q, k, v, backend="triton")
+    with pytest.raises(ValueError, match="backend"):
+        decode_attention(q[:, :1], k, v, jnp.ones((1,), jnp.int32),
+                         backend="triton")
+
+
+# ------------------------------------------------- q_block padding fix
+def test_prime_s_does_not_collapse_q_block():
+    """The old divisor fallback degraded q_block to 1 for prime S; the
+    padded path keeps the requested block size."""
+    assert pad_to_q_block(97, 64) == (64, 128)
+    assert pad_to_q_block(4096, 512) == (512, 4096)
+    assert pad_to_q_block(16, 64) == (16, 16)
+    assert pad_to_q_block(33, 32) == (32, 64)
+
+
+def test_prime_s_reference_correctness():
+    """Padded-scan reference path vs a direct full-matrix oracle."""
+    s, h, kvh, hd = 29, 4, 2, 8
+    q, k, v = _qkv(s, h, kvh, hd, b=1)
+    g = h // kvh
+    qg = q.reshape(1, s, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(float(hd))
+    pos = jnp.arange(s)
+    scores = jnp.where(
+        (pos[:, None] >= pos[None, :])[None, None, None], scores, MASK_VALUE
+    )
+    probs = jax.nn.softmax(scores, axis=-1)
+    oracle = jnp.einsum("bkgqs,bskh->bqkgh", probs, v).reshape(1, s, h, hd)
+    out = blockwise_causal_attention(q, k, v, q_block=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------- block accounting
+def test_visible_block_fraction_causal_and_windowed():
+    # 4x4 causal grid: 1+2+3+4 of 16 blocks visible
+    assert visible_block_fraction(512, 128, 128, None) == pytest.approx(
+        10 / 16
+    )
+    # window=128 clips the lower triangle to a 2-block band
+    assert visible_block_fraction(512, 128, 128, 128) == pytest.approx(
+        7 / 16
+    )
+    # fraction shrinks toward the window band as S grows
+    assert visible_block_fraction(4096, 512, 512, None) == pytest.approx(
+        36 / 64
+    )
+    assert visible_block_fraction(64, 64, 64, None) == 1.0
+    assert decode_visible_blocks(512, 128, None) == 4
+    assert decode_visible_blocks(512, 128, 128) == 2
+
+
+def test_roofline_bills_flash_less_than_reference():
+    """Masked-block skipping must be visible in the FLOPs accounting."""
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.launch.roofline import attention_backend_adjustment
+
+    cfg = get_config("phi3-medium-14b")
+    shape = next(s for s in SHAPES if s.name == "train_4k")
+    assert attention_backend_adjustment(cfg, shape) is None  # reference
+    adj = attention_backend_adjustment(
+        cfg.replace(attn_backend="pallas"), shape
+    )
+    assert adj is not None
+    assert 0.0 < adj["visible_block_fraction"] < 1.0
+    assert adj["flash_attn_flops"] < adj["ref_attn_flops"]
+    assert adj["flops_saved"] > 0
+    assert adj["score_bytes_saved"] > 0
+
+
+# ------------------------------------------------- model-level wiring
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b"])
+def test_model_forward_backend_parity(arch):
+    """cfg.attn_backend='pallas' threads through the family forward."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                              cfg.vocab_size)
+    logits_ref, *_ = model.forward(params, {"tokens": toks}, None)
+    model_fl = build_model(cfg.replace(attn_backend="pallas", kv_block=16))
+    logits_fl, *_ = model_fl.forward(params, {"tokens": toks}, None)
+    np.testing.assert_allclose(
+        np.asarray(logits_ref, np.float32), np.asarray(logits_fl, np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_model_decode_step_backend_parity():
+    """Prefill + one decode step under the pallas backend equals the
+    reference full forward at the next position."""
+    cfg = get_smoke("qwen2-0.5b").replace(attn_backend="pallas", kv_block=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    last_logits, cache = model.prefill(params, None, {"tokens": toks})
+    nxt = jnp.argmax(last_logits[:, 0, : cfg.vocab_size], -1)[:, None]
+    big = model.init_cache(2, 48)
+    big["k"] = big["k"].at[:, :, :32].set(cache["k"])
+    big["v"] = big["v"].at[:, :, :32].set(cache["v"])
+    big["len"] = cache["len"]
+    lg, _ = model.decode_step(params, None, big, {"tokens": nxt})
+
+    ref_model = build_model(cfg.replace(attn_backend="reference"))
+    toks33 = jnp.concatenate([toks, nxt], axis=1)
+    logits33, _ = ref_model.forward(params, {"tokens": toks33}, None)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0, : cfg.vocab_size], np.float32),
+        np.asarray(logits33[:, -1, : cfg.vocab_size], np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+# ------------------------------------------------- hypothesis sweeps
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=st.integers(min_value=1, max_value=70),
+        g=st.sampled_from([1, 2, 4]),
+        kvh=st.sampled_from([1, 2]),
+        window=st.sampled_from([None, 1, 8, 33]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_flash_property_random_shapes(s, g, kvh, window, seed):
+        hd = 8
+        q, k, v = _qkv(s, g * kvh, kvh, hd, seed=seed, b=1)
+        ref = blockwise_causal_attention(q, k, v, q_block=16, window=window)
+        out = blockwise_causal_attention(
+            q, k, v, q_block=16, kv_block=16, window=window, backend="pallas"
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=5e-5, atol=5e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s_max=st.sampled_from([16, 48, 64]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_decode_property_random_lengths(s_max, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (2, 1, 4, 8))
+        kc = jax.random.normal(ks[1], (2, s_max, 2, 8))
+        vc = jax.random.normal(ks[2], (2, s_max, 2, 8))
+        lens = jax.random.randint(ks[3], (2,), 1, s_max + 1)
+        ref = decode_attention(q, kc, vc, lens)
+        fl = decode_attention(q, kc, vc, lens, kv_block=16, backend="pallas")
+        np.testing.assert_allclose(
+            np.asarray(ref), np.asarray(fl), rtol=5e-5, atol=5e-5
+        )
