@@ -62,6 +62,10 @@ VARIANTS = {
         ("B4_flash_decode", "minicpm-2b", "decode_32k",
          dict(decode_shardings=True,
               cfg_overrides={"attn_backend": "pallas"})),
+        ("B5_paged_decode", "minicpm-2b", "decode_32k",
+         dict(decode_shardings=True,
+              cfg_overrides={"attn_backend": "pallas",
+                             "kv_cache": "paged"})),
     ],
     "C": [
         ("C0_baseline", "mixtral-8x7b", "train_4k", {}),

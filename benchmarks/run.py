@@ -11,7 +11,9 @@
                          (seq-len/window/GQA sweeps, visible-block ratio)
     roofline          -> EXPERIMENTS.md roofline table from dry-run records
     serve_bench       -> §6 zero-overhead serving: replay vs prefill-wave
-                         admission latency + tokens/sec per model family
+                         admission latency + tokens/sec per model family,
+                         plus dense vs paged KV-cache rows (block-pool
+                         cache gauges; paged asserted token-identical)
 """
 
 import sys

@@ -1,8 +1,8 @@
-"""Serving-engine benchmark: replay vs prefill-wave admission.
+"""Serving-engine benchmark: admission modes and cache layouts.
 
-For each model family (transformer / griffin / mamba2 smoke configs) and
-each admission mode, measures on a steady engine (after a warmup batch
-that pays all jit compiles):
+For each model family (transformer / griffin / mamba2 smoke configs),
+measures on a steady engine (after a warmup batch that pays all jit
+compiles):
 
 * **admission latency** — wall time of the engine tick that admits a full
   wave of ``PROMPT_LEN``-token prompts (the paper's zero-overhead serving
@@ -10,14 +10,24 @@ that pays all jit compiles):
   token-by-token),
 * **jitted dispatches per wave** — prefill admission must issue O(1)
   model calls per wave vs O(max_prompt_len) for replay (asserted here),
-* **steady-state tokens/sec** — generated tokens over the full drain.
+* **steady-state tokens/sec** — generated tokens over the full drain,
+* **dense vs paged cache** — same prefill admission through the block-
+  pool cache (``cache="paged"``): rows report the engine's cache-memory
+  gauges (``peak bytes allocated``, ``peak blocks``, peak utilization)
+  next to the dense stripes' constant footprint, and outputs are asserted
+  token-for-token identical to dense.
 
 CSV rows via ``benchmarks.common.csv_row``:
-``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``.
+``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>`` and
+``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``.
+
+``--smoke`` (CI gate) runs the transformer family only, with the paged
+vs dense equivalence assertion intact.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -37,6 +47,7 @@ N_SLOTS = 4
 MAX_LEN = 128
 PROMPT_LEN = 48
 MAX_NEW = 16
+BLOCK_SIZE = 16
 
 
 def _prompts(n: int, seed: int = 0):
@@ -54,7 +65,9 @@ def _run_wave(engine, prompts, uid0=0):
     for r in reqs:
         engine.submit(r)
     # first tick = admission (+ one fused decode step)
-    calls0 = dict(engine.stats)
+    calls0 = dict(
+        (k, engine.stats[k]) for k in ("prefill_calls", "decode_calls")
+    )
     t0 = time.perf_counter()
     engine.step()
     admit_s = time.perf_counter() - t0
@@ -67,7 +80,8 @@ def _run_wave(engine, prompts, uid0=0):
     engine.run()
     drain_s = time.perf_counter() - t0
     toks = sum(len(r.output) for r in reqs)
-    return admit_s, admit_calls, toks, admit_s + drain_s
+    outs = [r.output for r in reqs]
+    return admit_s, admit_calls, toks, admit_s + drain_s, outs
 
 
 def bench_family(family: str, arch: str):
@@ -80,7 +94,7 @@ def bench_family(family: str, arch: str):
             model, params, n_slots=N_SLOTS, max_len=MAX_LEN, admission=mode
         )
         _run_wave(engine, _prompts(N_SLOTS, seed=1))          # warmup/compile
-        admit_s, admit_calls, toks, total_s = _run_wave(
+        admit_s, admit_calls, toks, total_s, _ = _run_wave(
             engine, _prompts(N_SLOTS, seed=2), uid0=100
         )
         if mode == "prefill":
@@ -93,15 +107,55 @@ def bench_family(family: str, arch: str):
             f"calls/wave={admit_calls} toks/s={toks / total_s:.0f} "
             f"wave={N_SLOTS}x{PROMPT_LEN}tok",
         ))
+    rows.extend(bench_cache_modes(family, model, params))
     return rows
 
 
-def main() -> None:
-    for family, arch in FAMILIES.items():
+def bench_cache_modes(family: str, model, params):
+    """Dense vs paged cache under prefill admission: latency + the
+    cache-memory gauges, with a token-for-token equivalence assert."""
+    rows, outs = [], {}
+    for mode in ("dense", "paged"):
+        engine = ServingEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            admission="prefill", cache=mode, block_size=BLOCK_SIZE,
+        )
+        _run_wave(engine, _prompts(N_SLOTS, seed=1))          # warmup/compile
+        admit_s, _calls, toks, total_s, outs[mode] = _run_wave(
+            engine, _prompts(N_SLOTS, seed=2), uid0=100
+        )
+        s = engine.stats
+        if mode == "paged" and s["blocks_total"]:
+            mem = (
+                f"peak_blocks={s['peak_blocks_in_use']}/{s['blocks_total']} "
+                f"peak_util={s['peak_block_utilization']:.2f}"
+            )
+        else:
+            mem = f"cache_bytes={s['cache_bytes_allocated']}"
+        rows.append(csv_row(
+            f"serve_cache_{family}_{mode}",
+            admit_s * 1e6,
+            f"toks/s={toks / total_s:.0f} {mem}",
+        ))
+    assert outs["paged"] == outs["dense"], (
+        f"{family}: paged cache diverged from dense"
+    )
+    return rows
+
+
+def main(smoke: bool = False) -> None:
+    families = (
+        {"transformer": FAMILIES["transformer"]} if smoke else FAMILIES
+    )
+    for family, arch in families.items():
         for row in bench_family(family, arch):
             print(row)
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: transformer family only")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    main()
+    main(smoke=args.smoke)

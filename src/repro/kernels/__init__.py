@@ -10,8 +10,8 @@ from repro.kernels.flash_attention import (
     decode_visible_blocks,
     flash_attention,
     flash_decode_attention,
-    flash_decode_supported,
     pad_to_q_block,
+    paged_flash_decode_attention,
     visible_block_fraction,
 )
 from repro.kernels.ops import quanta_apply_fused, quanta_linear_fused

@@ -33,8 +33,15 @@ Mosaic backward kernel is a recorded follow-up.
 The decode variant (``flash_decode_attention``) handles ``q_len == 1``
 over a per-slot ``cache_len``-masked KV cache: the length is dynamic, so
 blocks past ``cache_len`` (and, with a window, before the window start)
-are predicated off rather than grid-skipped; the serving engine's dense
-per-slot cache keeps the index maps static.
+are predicated off rather than grid-skipped; the dense per-slot cache
+keeps the index maps static, and non-block-divisible cache lengths are
+padded up (pad rows sit past every ``cache_len``) so the kernel stays
+engaged at odd ``max_len``.  The paged variant
+(``paged_flash_decode_attention``) consumes the serving engine's block
+tables as a scalar-prefetch operand: its index maps gather KV blocks
+through the table and unallocated blocks are true grid-level skips (no
+DMA, predicated compute) — per-slot decode reads scale with allocated
+blocks, not ``max_len``.
 
 Interpret-on-CPU / Mosaic-on-TPU dispatch matches ``kernels/ops.py``
 (``interpret=None`` auto-detects via ``dispatch.on_cpu``).
@@ -56,7 +63,7 @@ from repro.kernels.dispatch import MASK_VALUE, masked_softmax, resolve_interpret
 __all__ = [
     "flash_attention",
     "flash_decode_attention",
-    "flash_decode_supported",
+    "paged_flash_decode_attention",
     "blockwise_reference_attention",
     "pad_to_q_block",
     "visible_block_fraction",
@@ -102,14 +109,6 @@ def visible_block_fraction(s: int, block_q: int, block_k: int,
         j_lo, j_hi = _visible_j_range(i * bq, bq, bk, n_k, window)
         visible += max(0, j_hi - j_lo + 1)
     return visible / float(n_q * n_k)
-
-
-def flash_decode_supported(s_max: int, block_k: int) -> bool:
-    """Can ``flash_decode_attention`` run over a dense cache of length
-    ``s_max``?  The single source of truth for the divisibility
-    requirement — the ``models/attention.py`` router falls back to the
-    reference path exactly when this is False."""
-    return s_max % min(block_k, s_max) == 0
 
 
 def decode_visible_blocks(s_max: int, block_k: int,
@@ -494,10 +493,16 @@ def flash_decode_attention(
 ) -> jnp.ndarray:
     """Single-step flash attention over a dense KV cache.
 
-    Requires ``S_max % min(block_k, S_max) == 0`` (the serving engine's
-    bucketed cache shapes guarantee it; ``models/attention.py`` falls back
-    to the reference path otherwise rather than copy-pad the cache every
-    step).  Returns ``(B, 1, H, hd)``.
+    A cache length the KV block doesn't divide is padded up to the next
+    block multiple (the q_block pad+slice convention of the forward
+    kernel): padded rows sit past every ``cache_len`` so the per-slot
+    length mask hides them, and the Pallas path stays engaged at odd
+    ``max_len`` instead of silently falling back to the reference path.
+    The pad is a whole-cache copy inside the jitted step, so callers
+    should still prefer block-aligned cache extents (the serving
+    engine's bucketed shapes are; the pad only covers the odd-shape
+    tail, where the old behavior was a silent O(S^2)-flops fallback).
+    Returns ``(B, 1, H, hd)``.
     """
     b, q_len, h, hd = q.shape
     if q_len != 1:
@@ -506,10 +511,12 @@ def flash_decode_attention(
     kv = k_cache.shape[2]
     g = h // kv
     bk = min(block_k, s_max)
-    if not flash_decode_supported(s_max, block_k):
-        raise ValueError(
-            f"cache length {s_max} not divisible by block_k {bk}"
-        )
+    pad_k = (-s_max) % bk
+    if pad_k:
+        widths = ((0, 0), (0, pad_k), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+        s_max += pad_k
     n_k = s_max // bk
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
     qg = q.reshape(b, kv, g, hd)
@@ -535,4 +542,132 @@ def flash_decode_attention(
         ],
         interpret=resolve_interpret(interpret),
     )(lens, qg, k_cache, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernel: the KV cache is a block pool, per-slot block tables
+# (repro.serve.paging) map logical KV blocks to pool rows.  The table is a
+# scalar-prefetch operand, so the grid index maps GATHER blocks through it
+# — the grid-level decode skipping the dense kernel could not do: a slot
+# with 3 allocated blocks fetches exactly 3 blocks from HBM, not
+# max_len/block_size.  Unallocated trailing steps revisit the slot's last
+# allocated pool row (tables are exported with that clamp) so they issue
+# no DMA, and their compute is predicated off by the length test.
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, n_b: int,
+                         scale: float, window: Optional[int]):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                                   # logical block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]                                    # this slot's len
+    q_pos = length - 1
+    # Unallocated blocks (j*bs >= length) predicate off all compute; their
+    # index maps revisited an already-resident pool row, so they cost
+    # neither DMA nor FLOPs — per-slot grid-level skipping.
+    should = j * bs < length
+    if window is not None:
+        should &= (j + 1) * bs > q_pos - window + 1
+
+    @pl.when(should)
+    def _step():
+        q = q_ref[0, 0]                                    # (G, hd)
+        k = k_ref[0, :, 0, :]                              # (bs, hd)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (G, bs)
+        kv_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < length
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_b - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+def paged_flash_decode_attention(
+    q: jnp.ndarray,               # (B, 1, H, hd)
+    k_pool: jnp.ndarray,          # (n_blocks, block_size, KV, hd)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,    # (B, max_blocks) physical pool rows
+    cache_len: jnp.ndarray,       # (B,) valid tokens (incl. the new one)
+    *,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Single-step flash attention over a paged KV pool.
+
+    ``block_tables[b, j]`` is the pool row holding slot ``b``'s logical
+    block ``j``; entries past the slot's allocated count must repeat its
+    last allocated row (``paging.PagedCacheView.device_tables`` exports
+    that layout) so skipped grid steps re-address a resident block.  The
+    block size is the pool's — no ``block_k`` knob; serving picks it at
+    cache construction.  Returns ``(B, 1, H, hd)``.
+    """
+    b, q_len, h, hd = q.shape
+    if q_len != 1:
+        raise ValueError(f"decode kernel expects q_len == 1, got {q_len}")
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    g = h // kv
+    n_b = block_tables.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kv, g, hd)
+    lens = cache_len.reshape(b).astype(jnp.int32)
+    tables = block_tables.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # block tables, per-slot lengths
+        grid=(b, kv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b_, k_, j, bt, ln: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, k_, j, bt, ln: (bt[b_, j], 0, k_, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, k_, j, bt, ln: (bt[b_, j], 0, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, k_, j, bt, ln: (b_, k_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((g, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel, bs=bs, n_b=n_b, scale=scale, window=window
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(tables, lens, qg, k_pool, v_pool)
     return out.reshape(b, 1, h, hd)

@@ -26,6 +26,8 @@ import math
 import re
 from typing import Any, Dict, Optional
 
+import numpy as np
+
 from repro.kernels.flash_attention import (
     decode_visible_blocks,
     visible_block_fraction,
@@ -40,6 +42,7 @@ __all__ = [
     "model_flops",
     "active_param_count",
     "attention_backend_adjustment",
+    "paged_cache_adjustment",
 ]
 
 # TPU v5e per chip
@@ -280,6 +283,58 @@ def attention_backend_adjustment(
     }
 
 
+def paged_cache_adjustment(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Optional[Dict[str, float]]:
+    """Analytic decode-memory swap for ``cfg.kv_cache == "paged"``.
+
+    The dense serving cache makes every decode step read ``max_len``
+    (= ``shape.seq_len``) KV rows per slot; the paged cache's block-table
+    gather (``paged_flash_decode_attention`` / the gather reference) reads
+    only each slot's ALLOCATED blocks.  Like the flash-kernel swap, this
+    cannot be parsed from compiled HLO — the dry-run lowers the dense
+    program — so the KV read traffic is rebilled analytically:
+
+    * dense rows billed per slot: ``seq_len``,
+    * paged rows billed: ``kv_occupancy * seq_len`` rounded UP to the
+      block size (partially-filled blocks are fetched whole).
+
+    Only the attention-gather READS of the k/v leaves are swapped (the
+    write of the incoming token and all O(1) state traffic are identical
+    in both layouts) — conservative by construction.  The savings apply
+    to the PER-DEVICE bytes at full size, not divided by chips: the
+    post-SPMD decode program materializes the full cache gather on every
+    device (measured on cell B: the attention while-loops read exactly
+    ``2 * L * B * S * kv_dim`` bytes per device — batch/seq sharding of
+    the cache at rest does not shard the gather, which is what the B3
+    ``cache_seq_shard`` experiment already showed).  Returns ``None``
+    for non-decode shapes, attention-free families, and the hybrid
+    family, whose ring cache is already ``local_window``-bounded (its
+    paged win is slots shorter than the window, second-order here).
+    """
+    if cfg.kv_cache != "paged" or shape.kind != "decode":
+        return None
+    if cfg.family in ("ssm", "hybrid"):
+        return None
+    if not 0.0 < cfg.kv_occupancy <= 1.0:
+        raise ValueError(f"kv_occupancy {cfg.kv_occupancy} outside (0, 1]")
+    b, s = shape.global_batch, shape.seq_len
+    bs = cfg.kv_block_size
+    dense_rows = s
+    paged_rows = min(s, -(-int(cfg.kv_occupancy * s) // bs) * bs)
+    dtype_bytes = int(np.dtype(cfg.param_dtype).itemsize)
+    row_bytes = 2 * cfg.n_layers * cfg.kv_dim * dtype_bytes   # k + v
+    return {
+        "block_size": bs,
+        "occupancy": cfg.kv_occupancy,
+        "dense_rows_per_slot": float(dense_rows),
+        "paged_rows_per_slot": float(paged_rows),
+        "kv_read_bytes_dense": float(b * dense_rows * row_bytes),
+        "kv_read_bytes_paged": float(b * paged_rows * row_bytes),
+        "kv_bytes_saved": float(b * (dense_rows - paged_rows) * row_bytes),
+    }
+
+
 def roofline_terms(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -300,6 +355,13 @@ def roofline_terms(
         hlo_bytes_dev = max(
             0.0, hlo_bytes_dev - adj["score_bytes_saved"] / n_chips
         )
+    padj = paged_cache_adjustment(cfg, shape)
+    if padj is not None:
+        # Decode KV reads billed by allocated blocks, not max_len.  NOT
+        # divided by chips: the per-device program gathers the full cache
+        # for attention (see paged_cache_adjustment), so the read — and
+        # its shrinkage — appear in the per-device bytes at full size.
+        hlo_bytes_dev = max(0.0, hlo_bytes_dev - padj["kv_bytes_saved"])
     coll_per_device = float(sum(collective_bytes.values()))
     t_compute = hlo_flops_dev / HW["peak_flops"]
     t_memory = hlo_bytes_dev / HW["hbm_bw"]
@@ -316,6 +378,8 @@ def roofline_terms(
         **terms,
         "attn_backend": cfg.attn_backend,
         "attn_adjustment": adj,
+        "kv_cache": cfg.kv_cache,
+        "paged_adjustment": padj,
         "dominant": dominant.replace("_s", ""),
         "hlo_flops_per_device": hlo_flops_dev,
         "hlo_flops": hlo_flops_global,

@@ -6,8 +6,10 @@
 
 ``cache_slot_spec(cfg)`` returns the declarative slot layout of the decode
 cache (a ``CacheLeafSpec`` per leaf, mirroring ``init_cache``): which axis
-is the serving-slot axis and what value a freed slot resets to.  The
-serving engine derives all cache surgery from it.
+is the serving-slot axis and what value a freed slot resets to.  Leaves
+with a per-token axis are ``PagedCacheLeafSpec`` — the paged serving
+cache (``repro.serve.paging``) pools exactly those.  The serving engine
+derives all cache surgery from the spec.
 
 ``input_specs(cfg, shape)`` builds ``jax.ShapeDtypeStruct`` stand-ins for
 every model input of a given (arch x shape) cell — weak-type-correct,

@@ -33,16 +33,19 @@ import jax.numpy as jnp
 
 from repro.kernels.dispatch import MASK_VALUE, masked_softmax
 from repro.kernels.flash_attention import (
+    _block_attend,
     blockwise_reference_attention,
     flash_attention,
     flash_decode_attention,
-    flash_decode_supported,
+    paged_flash_decode_attention,
 )
 
 __all__ = [
     "MASK_VALUE",
     "blockwise_causal_attention",
+    "chunk_attention",
     "decode_attention",
+    "paged_decode_attention",
 ]
 
 _BACKENDS = ("reference", "pallas")
@@ -90,6 +93,33 @@ def blockwise_causal_attention(
     )
 
 
+def chunk_attention(
+    q: jnp.ndarray,           # (B, C, H, hd) — one prefill chunk
+    k: jnp.ndarray,           # (B, S_stage, KV, hd) — staging cache
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,       # (C,) absolute positions of the chunk
+    *,
+    window: Optional[int] = None,
+    fast_softmax: bool = False,
+) -> jnp.ndarray:
+    """Cross-shaped causal attention for **chunked prefill**: chunk
+    queries at absolute positions ``q_pos`` attend over the whole staging
+    buffer (keys at positions ``0..S_stage``), causally masked — rows the
+    chunk has not reached yet fall above the diagonal and contribute
+    nothing.  One call per chunk bounds admission latency by the chunk
+    size instead of the prompt length.  Returns ``(B, C, H, hd)``.
+    """
+    b, c, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    out = _block_attend(
+        q.reshape(b, c, kv, g, hd), k, v,
+        q_pos, jnp.arange(k.shape[1]), window,
+        1.0 / math.sqrt(hd), fast_softmax,
+    )
+    return out.reshape(b, c, h, hd)
+
+
 def decode_attention(
     q: jnp.ndarray,           # (B, 1, H, hd) — one new token
     k_cache: jnp.ndarray,     # (B, S_max, KV, hd)
@@ -105,15 +135,14 @@ def decode_attention(
 
     ``backend="pallas"`` routes to the flash decode kernel (per-slot
     ``cache_len`` masking, blocks past the valid length predicated off);
-    it requires ``S_max`` divisible by the KV block, so non-divisible
-    cache shapes fall back to this reference path rather than copy-pad
-    the cache every step.
+    non-block-divisible cache lengths are pad+sliced inside the kernel
+    wrapper, so the Pallas path stays engaged at odd ``max_len``.
     """
     _check_backend(backend)
     b, _, h, hd = q.shape
     kv = k_cache.shape[2]
     s_max = k_cache.shape[1]
-    if backend == "pallas" and flash_decode_supported(s_max, kv_block):
+    if backend == "pallas":
         return flash_decode_attention(
             q, k_cache, v_cache, cache_len, window=window, block_k=kv_block
         )
@@ -135,3 +164,46 @@ def decode_attention(
     probs = masked_softmax(scores, v_cache.dtype, fast_softmax)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
     return out.reshape(b, 1, h, hd)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,               # (B, 1, H, hd) — one new token
+    k_pool: jnp.ndarray,          # (n_blocks, block_size, KV, hd)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,    # (B, max_blocks) physical pool rows
+    cache_len: jnp.ndarray,       # (B,) valid entries (incl. new token)
+    *,
+    window: Optional[int] = None,
+    fast_softmax: bool = False,
+    backend: str = "reference",
+) -> jnp.ndarray:
+    """Single-step attention over a paged KV pool.  Returns
+    ``(B, 1, H, hd)``.
+
+    ``backend="pallas"`` routes to the scalar-prefetch paged kernel whose
+    index maps gather KV blocks through the block table (unallocated
+    blocks are grid-level skips).  The reference path gathers each slot's
+    blocks into a dense view first — numerically the oracle, and the CPU
+    fallback.  Table entries past a slot's allocated count must repeat
+    its last allocated block (``paging.PagedCacheView.device_tables``):
+    the duplicated rows land at logical positions ``>= cache_len`` where
+    the length mask hides them.
+    """
+    _check_backend(backend)
+    if backend == "pallas":
+        return paged_flash_decode_attention(
+            q, k_pool, v_pool, block_tables, cache_len, window=window
+        )
+    b = q.shape[0]
+    bs = k_pool.shape[1]
+    n_b = block_tables.shape[1]
+    k_dense = k_pool[block_tables].reshape(
+        b, n_b * bs, *k_pool.shape[2:]
+    )
+    v_dense = v_pool[block_tables].reshape(
+        b, n_b * bs, *v_pool.shape[2:]
+    )
+    return decode_attention(
+        q, k_dense, v_dense, cache_len, window=window,
+        fast_softmax=fast_softmax, backend="reference",
+    )

@@ -24,6 +24,7 @@ __all__ = [
     "ModelConfig",
     "ShapeConfig",
     "CacheLeafSpec",
+    "PagedCacheLeafSpec",
     "reset_cache_slots",
     "merge_cache_slots",
     "insert_cache_slots",
@@ -94,6 +95,17 @@ class ModelConfig:
     # fp32 row-max/denominator (halves score-tensor HBM traffic; the row
     # statistics stay fp32 so logsumexp accuracy is preserved)
     fast_softmax: bool = False
+    # Serving KV-cache layout for roofline/dry-run accounting:
+    # "dense" bills decode KV reads at max_len rows per slot; "paged"
+    # bills them by allocated blocks (repro.serve.paging pools behind the
+    # same decode_step, block tables as a traced argument).  kv_occupancy
+    # models the steady-state mean fraction of max_len a slot actually
+    # holds (continuous batching drains/backfills slots at staggered
+    # lengths, so 0.5 = uniform occupancy; the serving engine's gauges
+    # measure the true value per workload).
+    kv_cache: str = "dense"
+    kv_block_size: int = 64
+    kv_occupancy: float = 0.5
     # remat policy for train_step
     remat: bool = True
     # FSDP: additionally shard big weight stacks over the data axis
@@ -164,11 +176,43 @@ class CacheLeafSpec:
     fill: Any = 0
 
 
-def reset_cache_slots(spec, cache, slot_ids):
-    """Reset the given slots of every cache leaf to the spec's fill value."""
+@dataclasses.dataclass(frozen=True)
+class PagedCacheLeafSpec(CacheLeafSpec):
+    """A cache leaf with a per-token axis that a paged allocator may pool.
+
+    ``page_axis`` names the token axis of the DENSE layout (``slot_axis``
+    must directly precede it).  Under ``ServingEngine(cache="paged")`` the
+    leaf is stored as a block pool — the ``(slot, token)`` axis pair is
+    replaced by ``(n_blocks, block_size)`` and a host-side block table maps
+    each slot's logical blocks to pool rows (``repro.serve.paging``).
+    Physical block 0 is reserved as the null/scratch block: scatter padding
+    and writes of freed slots land there and are never read back.
+
+    ``ring=True`` marks a fixed-capacity ring buffer (Griffin's
+    local-attention window): rows in use are ``[0, min(len, extent))``, so
+    a slot's allocation saturates at ``ceil(extent / block_size)`` blocks.
+
+    The dense engine (and every existing cache-surgery helper) treats this
+    exactly as a ``CacheLeafSpec`` — paging is strictly additive.
+    """
+
+    page_axis: int = 2
+    ring: bool = False
+
+
+def reset_cache_slots(spec, cache, slot_ids, skip_paged=False):
+    """Reset the given slots of every cache leaf to the spec's fill value.
+
+    ``skip_paged`` leaves ``PagedCacheLeafSpec`` leaves untouched — in the
+    paged engine those are block pools without a slot axis; freeing is a
+    host-side block-table operation, and stale pool rows are never read
+    (every consumer masks by per-slot length / ring position).
+    """
     ids = jnp.asarray(slot_ids)
 
     def one(ls: CacheLeafSpec, leaf):
+        if skip_paged and isinstance(ls, PagedCacheLeafSpec):
+            return leaf
         idx = [slice(None)] * leaf.ndim
         idx[ls.slot_axis] = ids
         return leaf.at[tuple(idx)].set(jnp.asarray(ls.fill, leaf.dtype))
@@ -176,11 +220,19 @@ def reset_cache_slots(spec, cache, slot_ids):
     return jax.tree_util.tree_map(one, spec, cache)
 
 
-def merge_cache_slots(spec, new_cache, old_cache, active):
-    """Keep ``new_cache`` stripes only where ``active`` (bool per slot)."""
+def merge_cache_slots(spec, new_cache, old_cache, active, skip_paged=False):
+    """Keep ``new_cache`` stripes only where ``active`` (bool per slot).
+
+    ``skip_paged`` takes ``PagedCacheLeafSpec`` leaves from ``new_cache``
+    unconditionally: pool writes of inactive slots land in the null block
+    (their freed block tables point every entry at pool row 0), so no
+    masked merge is needed — or possible, the pool has no slot axis.
+    """
     act = jnp.asarray(active)
 
     def one(ls: CacheLeafSpec, new, old):
+        if skip_paged and isinstance(ls, PagedCacheLeafSpec):
+            return new
         sel = act.reshape(
             (1,) * ls.slot_axis + (-1,) + (1,) * (new.ndim - ls.slot_axis - 1)
         )
@@ -203,18 +255,58 @@ def gather_conv_tail(x, lengths, window):
     return jnp.where((idx >= 0)[..., None], tail, 0)
 
 
-def insert_cache_slots(spec, cache, slot_ids, prefill_cache, lengths=None):
+def insert_cache_slots(spec, cache, slot_ids, prefill_cache, lengths=None,
+                       block_tables=None):
     """Shared ``insert_cache`` body: scatter a prefill wave's cache stripes
     into ``cache`` at ``slot_ids``, optionally overriding the wave's per-row
-    ``len`` leaf (for prefills that did not receive ``lengths``)."""
+    ``len`` leaf (for prefills that did not receive ``lengths``).
+
+    ``block_tables`` (wave_rows, n_logical_blocks) routes the wave's
+    ``PagedCacheLeafSpec`` leaves into a block pool instead (dense leaves
+    still scatter by ``slot_ids``) — see ``scatter_cache_slots``.
+    """
     if lengths is not None:
         prefill_cache = dict(
             prefill_cache, len=jnp.asarray(lengths, jnp.int32)
         )
-    return scatter_cache_slots(spec, cache, slot_ids, prefill_cache)
+    return scatter_cache_slots(spec, cache, slot_ids, prefill_cache,
+                               block_tables)
 
 
-def scatter_cache_slots(spec, cache, slot_ids, wave_cache):
+def _scatter_paged_leaf(ls: PagedCacheLeafSpec, dst, src, n, tables):
+    """Scatter a wave leaf's token blocks into a block pool through the
+    wave's block table.
+
+    ``src`` is the dense wave layout ``(..., wave_rows, S, ...)`` with the
+    token axis at ``ls.page_axis``; ``dst`` the pool
+    ``(..., n_blocks, block_size, ...)``.  ``tables`` (n, nb) holds the
+    destination pool row of each (wave row, logical block); entries past a
+    row's allocated count point at the null block 0, so the scatter shape
+    is static regardless of per-row prompt lengths.
+    """
+    s_ax, p_ax = ls.slot_axis, ls.page_axis
+    if p_ax != s_ax + 1:
+        raise ValueError("paged leaf needs page_axis == slot_axis + 1")
+    nb = tables.shape[1]
+    bs = dst.shape[p_ax]
+    src = jax.lax.slice_in_dim(src, 0, n, axis=s_ax)
+    s = src.shape[p_ax]
+    if s > nb * bs:
+        raise ValueError(f"wave extent {s} exceeds table span {nb * bs}")
+    if s < nb * bs:
+        pad = [(0, 0)] * src.ndim
+        pad[p_ax] = (0, nb * bs - s)
+        src = jnp.pad(src, pad)
+    # (..., n, nb*bs, ...) -> (..., n*nb, bs, ...): slot and logical-block
+    # axes are adjacent, so one reshape fuses them for the flat scatter.
+    shp = src.shape
+    src = src.reshape(shp[:s_ax] + (n * nb, bs) + shp[p_ax + 1:])
+    idx = [slice(None)] * dst.ndim
+    idx[s_ax] = jnp.asarray(tables, jnp.int32).reshape(-1)
+    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+
+
+def scatter_cache_slots(spec, cache, slot_ids, wave_cache, block_tables=None):
     """Scatter the first ``len(slot_ids)`` slot stripes of ``wave_cache``
     into ``cache`` at ``slot_ids``.
 
@@ -222,17 +314,31 @@ def scatter_cache_slots(spec, cache, slot_ids, wave_cache):
     axes (a prefill wave padded to less than ``max_len``); such axes are
     scattered as a prefix — valid because every consumer masks by the
     per-slot length (``decode_attention``) or ring-buffer position.
+
+    With ``block_tables`` (wave_rows, n_logical_blocks), leaves whose spec
+    is a ``PagedCacheLeafSpec`` are block pools: their wave stripes scatter
+    through the table (``_scatter_paged_leaf``) while dense leaves keep the
+    slot-indexed path — the one entry point serves both engine cache modes.
     """
     n = len(slot_ids)
     ids = jnp.asarray(slot_ids)
 
     def one(ls: CacheLeafSpec, dst, src):
+        if block_tables is not None and isinstance(ls, PagedCacheLeafSpec):
+            return _scatter_paged_leaf(ls, dst, src, n, block_tables)
         ax = ls.slot_axis
         src = jax.lax.slice_in_dim(src, 0, n, axis=ax)
         idx = [slice(None)] * dst.ndim
         idx[ax] = ids
         for d in range(dst.ndim):
-            if d != ax and src.shape[d] != dst.shape[d]:
+            if d == ax or src.shape[d] == dst.shape[d]:
+                continue
+            if src.shape[d] > dst.shape[d]:
+                # oversized wave axis (a chunk-aligned staging buffer can
+                # exceed max_len by < chunk + bucket): rows past the cache
+                # extent are pad garbage — drop them.
+                src = jax.lax.slice_in_dim(src, 0, dst.shape[d], axis=d)
+            else:
                 idx[d] = slice(0, src.shape[d])
         return dst.at[tuple(idx)].set(src.astype(dst.dtype))
 

@@ -30,6 +30,7 @@ from repro.models.attention import MASK_VALUE, blockwise_causal_attention
 from repro.models.common import (
     CacheLeafSpec,
     ModelConfig,
+    PagedCacheLeafSpec,
     apply_rope,
     cross_entropy_loss,
     dense_init,
@@ -262,13 +263,40 @@ class Griffin:
             else:
                 new_cache = None
         else:
-            k_ring, v_ring, pos_ring, new_len = cache            # ring buffer
             w = cfg.local_window
-            slot = (new_len - 1) % w                             # (B,)
             b_idx = jnp.arange(b)
-            k_ring = k_ring.at[b_idx, slot].set(kk[:, 0])
-            v_ring = v_ring.at[b_idx, slot].set(v[:, 0])
-            pos_ring = pos_ring.at[b_idx, slot].set(new_len - 1)
+            if len(cache) == 5:
+                # Paged ring decode: the ring leaves are block pools.
+                # Ring row r = pos % w lives in the slot's logical block
+                # r // bs; write the new token into its table-resolved
+                # pool row, then gather dense ring views through the
+                # table — the attention math below is shared with the
+                # dense branch.
+                k_pool, v_pool, pos_pool, new_len, bt = cache
+                bs = k_pool.shape[1]
+                nb = bt.shape[1]
+                r = (new_len - 1) % w                            # (B,)
+                p = bt[b_idx, r // bs]
+                k_pool = k_pool.at[p, r % bs].set(kk[:, 0])
+                v_pool = v_pool.at[p, r % bs].set(v[:, 0])
+                pos_pool = pos_pool.at[p, r % bs].set(new_len - 1)
+                k_ring = k_pool[bt].reshape(b, nb * bs, *k_pool.shape[2:])
+                v_ring = v_pool[bt].reshape(b, nb * bs, *v_pool.shape[2:])
+                pos_ring = pos_pool[bt].reshape(b, nb * bs)
+                # rows the slot has written are exactly [0, min(len, w)):
+                # this extra mask kills garbage gathered through the
+                # clamped (repeated-last-block) table entries.
+                row = jnp.arange(nb * bs)[None, :]
+                row_valid = row < jnp.minimum(new_len, w)[:, None]
+                new_cache = (k_pool, v_pool, pos_pool)
+            else:
+                k_ring, v_ring, pos_ring, new_len = cache        # ring buffer
+                slot = (new_len - 1) % w                         # (B,)
+                k_ring = k_ring.at[b_idx, slot].set(kk[:, 0])
+                v_ring = v_ring.at[b_idx, slot].set(v[:, 0])
+                pos_ring = pos_ring.at[b_idx, slot].set(new_len - 1)
+                row_valid = True
+                new_cache = (k_ring, v_ring, pos_ring)
             q_pos = (new_len - 1)[:, None]                       # (B,1)
             scale = 1.0 / math.sqrt(cfg.head_dim)
             g = cfg.n_heads // cfg.n_kv_heads
@@ -277,9 +305,9 @@ class Griffin:
                 "bqkgh,bskh->bkgqs", qg, k_ring,
                 preferred_element_type=jnp.float32,
             ) * scale
-            valid = (pos_ring >= 0) & (pos_ring <= q_pos) & (
+            valid = row_valid & (pos_ring >= 0) & (pos_ring <= q_pos) & (
                 q_pos - pos_ring < w
-            )                                                    # (B,W)
+            )                                                    # (B, W')
             scores = jnp.where(valid[:, None, None, None, :], scores,
                                MASK_VALUE)
             # same masked_softmax as the prefill path, so prefill-wave
@@ -288,13 +316,13 @@ class Griffin:
             out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_ring).reshape(
                 b, 1, cfg.n_heads, cfg.head_dim
             )
-            new_cache = (k_ring, v_ring, pos_ring)
         out = out.reshape(b, s, cfg.attn_dim)
         out = peft_linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
         return x + out, new_cache
 
     # --------------------------------------------------------------- forward
-    def _macro(self, bp, ba, x, rope, caches=None, prefill_lengths=None):
+    def _macro(self, bp, ba, x, rope, caches=None, prefill_lengths=None,
+               block_tables=None):
         """One (rec, mlp, rec, mlp, attn, mlp) macro-block."""
         if caches is None and prefill_lengths is not None:
             pl = prefill_lengths
@@ -329,9 +357,12 @@ class Griffin:
             bp["rec2"], get_subtree(ba, "rec2"), x, (lru2, conv2)
         )
         x = self._mlp(bp["mlp2"], get_subtree(ba, "mlp2"), x)
+        attn_cache = (
+            (k_r, v_r, pos_r, new_len) if block_tables is None
+            else (k_r, v_r, pos_r, new_len, block_tables)
+        )
         x, (k_r, v_r, pos_r) = self._attn_block(
-            bp["attn"], get_subtree(ba, "attn"), x, rope,
-            cache=(k_r, v_r, pos_r, new_len),
+            bp["attn"], get_subtree(ba, "attn"), x, rope, cache=attn_cache,
         )
         x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
         return x, (lru1, conv1, lru2, conv2, k_r, v_r, pos_r)
@@ -412,15 +443,22 @@ class Griffin:
         return cache
 
     def cache_spec(self) -> Dict[str, CacheLeafSpec]:
-        """Slot layout of ``init_cache`` leaves (see CacheLeafSpec)."""
+        """Slot layout of ``init_cache`` leaves (see CacheLeafSpec).
+
+        The local-attention ring buffers (``k``/``v``/``pos``) carry a
+        per-token (ring-row) axis and are ``PagedCacheLeafSpec(ring=True)``
+        — a paged slot allocates ring blocks lazily up to
+        ``ceil(local_window / block_size)``; the O(1) LRU/conv states stay
+        dense."""
         spec = {
             "lru1": CacheLeafSpec(slot_axis=1),
             "conv1": CacheLeafSpec(slot_axis=1),
             "lru2": CacheLeafSpec(slot_axis=1),
             "conv2": CacheLeafSpec(slot_axis=1),
-            "k": CacheLeafSpec(slot_axis=1),
-            "v": CacheLeafSpec(slot_axis=1),
-            "pos": CacheLeafSpec(slot_axis=1, fill=-1),
+            "k": PagedCacheLeafSpec(slot_axis=1, page_axis=2, ring=True),
+            "v": PagedCacheLeafSpec(slot_axis=1, page_axis=2, ring=True),
+            "pos": PagedCacheLeafSpec(slot_axis=1, page_axis=2, fill=-1,
+                                      ring=True),
             "len": CacheLeafSpec(slot_axis=0),
         }
         for i in range(self.n_tail):
@@ -428,11 +466,14 @@ class Griffin:
             spec[f"tail_conv{i + 1}"] = CacheLeafSpec(slot_axis=0)
         return spec
 
-    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None):
+    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None,
+                     block_tables=None):
         """Scatter a prefill wave's O(1) recurrent states + local-attention
-        ring buffers into the given cache slots."""
+        ring buffers into the given cache slots (``block_tables`` routes
+        the ring leaves into paged block pools)."""
         return insert_cache_slots(
-            self.cache_spec(), cache, slot_ids, prefill_cache, lengths
+            self.cache_spec(), cache, slot_ids, prefill_cache, lengths,
+            block_tables,
         )
 
     def prefill(self, params, peft, batch, lengths=None):
@@ -487,7 +528,7 @@ class Griffin:
         logits = x @ params["lm_head"].astype(cfg.compute_dtype)
         return logits, cache
 
-    def decode_step(self, params, peft, cache, batch):
+    def decode_step(self, params, peft, cache, batch, block_tables=None):
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
         block_adapters = (peft or {}).get("blocks", {})
@@ -501,6 +542,7 @@ class Griffin:
             x, new = self._macro(
                 bp, ba, x, rope,
                 caches=(lru1, conv1, lru2, conv2, k_r, v_r, pos_r, new_len),
+                block_tables=block_tables,
             )
             return x, new
 

@@ -328,8 +328,13 @@ class Mamba2:
             "len": CacheLeafSpec(slot_axis=0),
         }
 
-    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None):
-        """Scatter a prefill wave's O(1) final states into cache slots."""
+    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None,
+                     block_tables=None):
+        """Scatter a prefill wave's O(1) final states into cache slots.
+        Every leaf is O(1) state (no per-token axis), so there is nothing
+        to page: ``block_tables`` is accepted for API uniformity and
+        unused."""
+        del block_tables
         return insert_cache_slots(
             self.cache_spec(), cache, slot_ids, prefill_cache, lengths
         )
@@ -367,7 +372,8 @@ class Mamba2:
         }
         return logits, cache
 
-    def decode_step(self, params, peft, cache, batch):
+    def decode_step(self, params, peft, cache, batch, block_tables=None):
+        del block_tables                 # no per-token leaves: always dense
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
         layer_adapters = (peft or {}).get("layers", {})

@@ -17,10 +17,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.peft import get_adapter, peft_linear
-from repro.models.attention import blockwise_causal_attention, decode_attention
+from repro.models.attention import (
+    blockwise_causal_attention,
+    chunk_attention,
+    decode_attention,
+    paged_decode_attention,
+)
 from repro.models.common import (
     CacheLeafSpec,
     ModelConfig,
+    PagedCacheLeafSpec,
     apply_rope,
     cross_entropy_loss,
     dense_init,
@@ -141,9 +147,12 @@ class Transformer:
         return x @ params["lm_head"].astype(cfg.compute_dtype)
 
     # ------------------------------------------------------------ layer body
-    def _attn(self, lp, la, x, *, rope, window, cache=None):
-        """Attention sub-block.  ``cache=(k_cache, v_cache, cache_len)`` for
-        decode; returns ``(out, new_kv)``."""
+    def _attn(self, lp, la, x, *, rope, window, cache=None, chunk=None):
+        """Attention sub-block.  ``cache=(k_cache, v_cache, cache_len)``
+        for dense decode, ``(k_pool, v_pool, cache_len, block_tables)``
+        for paged decode; ``chunk=(k_stage, v_stage, pos)`` for one
+        chunked-prefill piece (``rope`` must already carry the chunk's
+        absolute positions).  Returns ``(out, new_kv)``."""
         cfg = self.cfg
         b, s, d = x.shape
         q = peft_linear(x, lp["q_proj"], get_adapter(la, "q_proj"),
@@ -159,13 +168,45 @@ class Transformer:
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
 
-        if cache is None:
+        if chunk is not None:
+            # chunked prefill: write this chunk's K/V at [pos, pos+s) of
+            # the dense staging buffer, then attend the chunk queries
+            # over the whole buffer (causally masked by position).
+            k_stage, v_stage, pos = chunk
+            k_stage = jax.lax.dynamic_update_slice_in_dim(
+                k_stage, k, pos, axis=1
+            )
+            v_stage = jax.lax.dynamic_update_slice_in_dim(
+                v_stage, v, pos, axis=1
+            )
+            out = chunk_attention(
+                q, k_stage, v_stage, pos + jnp.arange(s, dtype=jnp.int32),
+                window=window, fast_softmax=cfg.fast_softmax,
+            )
+            new_kv = (k_stage, v_stage)
+        elif cache is None:
             out = blockwise_causal_attention(
                 q, k, v, q_block=cfg.q_block, kv_block=cfg.kv_block,
                 window=window, fast_softmax=cfg.fast_softmax,
                 backend=cfg.attn_backend,
             )
             new_kv = (k, v)
+        elif len(cache) == 4:
+            # paged decode: the KV leaves are block pools; the new token
+            # lands in the slot's block-table-resolved pool row, then
+            # attention gathers blocks through the table.
+            k_pool, v_pool, cache_len, bt = cache
+            bs = k_pool.shape[1]
+            idx = cache_len - 1
+            b_idx = jnp.arange(b)
+            p = bt[b_idx, idx // bs]           # physical block of the token
+            k_pool = k_pool.at[p, idx % bs].set(k[:, 0])
+            v_pool = v_pool.at[p, idx % bs].set(v[:, 0])
+            out = paged_decode_attention(
+                q, k_pool, v_pool, bt, cache_len, window=window,
+                fast_softmax=cfg.fast_softmax, backend=cfg.attn_backend,
+            )
+            new_kv = (k_pool, v_pool)
         else:
             k_cache, v_cache, cache_len = cache
             idx = cache_len - 1  # slot of the new token (already counted)
@@ -189,17 +230,19 @@ class Transformer:
             jax.nn.silu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
         )
 
-    def _layer(self, lp, la, x, *, rope, cache=None, no_drop=None):
+    def _layer(self, lp, la, x, *, rope, cache=None, no_drop=None,
+               chunk=None):
         cfg = self.cfg
         h, new_kv = self._attn(
             lp["attn"], get_subtree(la, "attn"), rms_norm(x, lp["ln1"], cfg.norm_eps),
-            rope=rope, window=cfg.sliding_window, cache=cache,
+            rope=rope, window=cfg.sliding_window, cache=cache, chunk=chunk,
         )
         x = x + h
         hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
         if cfg.is_moe:
             if no_drop is None:
-                no_drop = cache is not None   # serving never drops tokens
+                # serving (decode or chunked prefill) never drops tokens
+                no_drop = cache is not None or chunk is not None
             out, aux = moe_ffn(
                 hn, lp["moe"],
                 n_experts=cfg.n_experts, top_k=cfg.top_k,
@@ -308,24 +351,31 @@ class Transformer:
         }
 
     def cache_spec(self) -> Dict[str, CacheLeafSpec]:
-        """Slot layout of ``init_cache`` leaves (see CacheLeafSpec)."""
+        """Slot layout of ``init_cache`` leaves.  The KV leaves carry a
+        per-token axis, so they are ``PagedCacheLeafSpec`` — poolable by
+        the paged serving cache; the dense engine treats them identically
+        (see CacheLeafSpec)."""
         return {
-            "k": CacheLeafSpec(slot_axis=1),
-            "v": CacheLeafSpec(slot_axis=1),
+            "k": PagedCacheLeafSpec(slot_axis=1, page_axis=2),
+            "v": PagedCacheLeafSpec(slot_axis=1, page_axis=2),
             "len": CacheLeafSpec(slot_axis=0),
         }
 
-    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None):
+    def insert_cache(self, cache, slot_ids, prefill_cache, lengths=None,
+                     block_tables=None):
         """Scatter a prefill wave's KV prefixes into the given cache slots.
 
         ``prefill_cache`` rows ``[0, len(slot_ids))`` land in ``slot_ids``;
         its (possibly shorter) sequence axis is written as a prefix — rows
         past each request's length hold pad-token garbage, but
         ``decode_attention`` masks by ``len`` and decode overwrites them in
-        order, so they are never read.
+        order, so they are never read.  With ``block_tables`` the KV
+        prefixes scatter into the paged block pools instead (pad blocks go
+        to the null block); the ``len`` leaf still scatters by slot.
         """
         return insert_cache_slots(
-            self.cache_spec(), cache, slot_ids, prefill_cache, lengths
+            self.cache_spec(), cache, slot_ids, prefill_cache, lengths,
+            block_tables,
         )
 
     def prefill(self, params, peft, batch, lengths=None):
@@ -366,9 +416,15 @@ class Transformer:
         cache = {"k": k, "v": v, "len": lens}
         return logits, cache
 
-    def decode_step(self, params, peft, cache, batch):
+    def decode_step(self, params, peft, cache, batch, block_tables=None):
         """One decode step.  ``batch`` holds the single new token (or frame
-        embedding); cache slots at ``len`` are written then attended."""
+        embedding); cache slots at ``len`` are written then attended.
+
+        With ``block_tables`` (B, max_blocks) the KV leaves are paged
+        block pools: each slot's new token is written into its
+        table-resolved pool row and attention gathers KV blocks through
+        the table (``paged_decode_attention``).
+        """
         cfg = self.cfg
         if cfg.frontend == "audio_tokens":
             x = batch["embeds"].astype(cfg.compute_dtype)      # (B, 1, d)
@@ -384,8 +440,12 @@ class Transformer:
 
         def body(x, xs):
             lp, la, k_l, v_l = xs
+            layer_cache = (
+                (k_l, v_l, new_len) if block_tables is None
+                else (k_l, v_l, new_len, block_tables)
+            )
             x, _aux, (k_l, v_l) = self._layer(
-                lp, la, x, rope=rope, cache=(k_l, v_l, new_len)
+                lp, la, x, rope=rope, cache=layer_cache
             )
             return x, (k_l, v_l)
 
@@ -395,6 +455,54 @@ class Transformer:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._unembed(params, x)
         new_cache = {"k": k_new, "v": v_new, "len": new_len}
+        return _mask_vocab_pad(logits, cfg.vocab_size), new_cache
+
+    def prefill_chunk(self, params, peft, batch, cache, pos, n_valid):
+        """One fixed-size chunk of an incremental (chunked) prefill.
+
+        ``batch["tokens"]`` (B, C) is the chunk, right-padded on the final
+        (possibly partial) chunk; ``cache`` a DENSE staging cache
+        (``init_cache(B, s_stage)``) holding the ``pos`` tokens already
+        prefilled; ``pos`` / ``n_valid`` are traced scalars (tokens staged
+        so far / real tokens in this chunk), so one compile serves every
+        chunk of every prompt at a given (C, s_stage).
+
+        Chunk K/V are written at ``[pos, pos+C)`` and the chunk queries
+        attend over the whole staging buffer causally
+        (``chunk_attention``) — exact continuation of the full prefill.
+        Returns ``(logits, new_cache)`` with ``logits`` (B, 1, V) taken at
+        the chunk's last REAL position and ``new_cache["len"] = pos +
+        n_valid``.  The finished staging cache lands in the serving cache
+        via the same ``insert_cache`` scatter as a wave prefill.
+        """
+        cfg = self.cfg
+        toks = batch["tokens"]
+        b, c = toks.shape
+        pos = jnp.asarray(pos, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        x = params["embed"]["tokens"][toks].astype(cfg.compute_dtype)
+        q_pos = pos + jnp.arange(c, dtype=jnp.int32)
+        rope = make_rope(q_pos[None, :], cfg.head_dim, cfg.rope_theta)
+        layer_adapters = (peft or {}).get("layers", {})
+
+        def body(x, xs):
+            lp, la, k_l, v_l = xs
+            x, _aux, (k_l, v_l) = self._layer(
+                lp, la, x, rope=rope, chunk=(k_l, v_l, pos)
+            )
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], layer_adapters, cache["k"], cache["v"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        x = x[jnp.arange(b), n_valid - 1][:, None]               # (B, 1, d)
+        logits = self._unembed(params, x)
+        new_cache = {
+            "k": k_new,
+            "v": v_new,
+            "len": jnp.full((b,), pos + n_valid, jnp.int32),
+        }
         return _mask_vocab_pad(logits, cfg.vocab_size), new_cache
 
 

@@ -1,4 +1,5 @@
-"""Serving runtime: batched continuous-batching engine over merged or
-adapter-attached models."""
+"""Serving runtime: batched continuous-batching engine (dense or paged
+KV cache) over merged or adapter-attached models."""
 
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.paging import BlockAllocator, PagedCacheView

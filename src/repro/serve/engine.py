@@ -3,21 +3,41 @@
 Design (vLLM-style, sized for the single-host example while keeping the
 production structure):
 
-* fixed ``n_slots`` decode batch; each slot owns a stripe of the KV/state
-  cache,
+* fixed ``n_slots`` decode batch; each slot owns either a dense stripe of
+  the KV/state cache (``cache="dense"``) or a **block table** into a
+  paged cache pool (``cache="paged"``),
 * admission by **prefill wave** (the fast path, default whenever the model
   exposes ``prefill``): queued prompts are right-padded to a common bucketed
   length, prefilled in ONE jitted call, and their cache stripes scattered
   into free slots via the model's ``insert_cache`` — transformers scatter
-  KV prefixes, recurrent/SSM families scatter O(1) final states.  That is
-  O(1) jitted dispatches per wave instead of the O(max_prompt_len) decode
-  replay,
+  KV prefixes, recurrent/SSM families scatter O(1) final states,
+* **chunked prefill** (``prefill_chunk=N``, models exposing
+  ``prefill_chunk``): a prompt longer than ``N`` tokens is prefilled one
+  fixed-size chunk per tick into a small dense staging buffer, with the
+  regular fused decode step still running between chunks — admission
+  latency is bounded by the chunk size and long prompts no longer stall
+  active streams.  The finished staging buffer lands in the serving cache
+  through the very same ``insert_cache`` scatter as a wave,
 * **decode-replay admission** is kept as an explicit fallback
   (``admission="replay"``, or automatically for models without ``prefill``
   / with non-token frontends): prompts replay token-by-token into the slot
   stripes, batched across the wave,
 * one fused decode step per tick for all active slots (greedy sampling),
 * slots free on EOS/max-length; the queue backfills on the next tick.
+
+Paged cache mode (``cache="paged"``, ``repro.serve.paging``): every cache
+leaf whose spec is a ``PagedCacheLeafSpec`` (transformer KV, Griffin's
+ring buffers) is stored as an ``(n_blocks, block_size, ...)`` pool.  A
+host-side ``BlockAllocator`` hands blocks to slots at admission, extends
+them as decode crosses block boundaries (alloc-on-append), and reclaims
+them the moment a request completes — cache memory scales with tokens in
+flight, not ``n_slots * max_len``.  The device sees one extra
+``block_tables`` argument per decode step; with
+``cfg.attn_backend="pallas"`` the paged flash-decode kernel gathers KV
+blocks through that table at grid level, so per-slot reads also scale
+with allocated blocks.  O(1) recurrent-state leaves (and all of Mamba2)
+stay dense — the paged engine degenerates to the dense one when a model
+has no pageable leaves.
 
 Cache surgery (freeing a slot, masking a replay wave, scattering a prefill
 wave) is driven by the model's declarative ``cache_spec()`` — a
@@ -30,27 +50,35 @@ steady-state decode performs no device->host cache reads.
 To bound recompilation, prefill waves are always padded to ``n_slots``
 rows and the token axis is bucketed to a multiple of ``seq_bucket``:
 at most ``max_len / seq_bucket`` distinct prefill shapes ever compile.
+Block tables are traced arguments of fixed shape, so paged decode keeps
+the dense mode's single compile.
+
+``stats`` exposes jitted-dispatch counters (``prefill_calls`` /
+``decode_calls`` / ``chunk_calls`` — benchmarks assert O(1) prefill
+admission) and cache-memory gauges (``cache_bytes_allocated``,
+``blocks_in_use``, ``peak_block_utilization``, ...) that
+``benchmarks/serve_bench.py`` reports for dense vs paged.
 
 Serving uses MERGED weights by default (paper §6: zero inference
 overhead); passing ``peft`` serves the adapter-attached model instead —
 numerically identical (tested).
 
-Follow-ons this structure enables (ROADMAP): paged KV cache (replace the
-dense slot stripes behind ``cache_spec``), multi-host sharded serving
-(shard the slot axis; admission/scatter already runs as one jitted call).
+Remaining follow-on (ROADMAP): multi-host sharded serving (shard the slot
+axis; admission/scatter already runs as one jitted call).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import merge_cache_slots, reset_cache_slots
+from repro.serve.paging import PagedCacheView
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -77,6 +105,10 @@ class ServingEngine:
         max_len: int = 256,
         admission: str = "auto",
         seq_bucket: int = 16,
+        cache: str = "dense",
+        block_size: int = 16,
+        n_blocks: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
     ):
         self.model = model
         self.cfg = model.cfg
@@ -87,12 +119,27 @@ class ServingEngine:
         self.seq_bucket = seq_bucket
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self.cache = model.init_cache(n_slots, max_len)
+        if cache not in ("dense", "paged"):
+            raise ValueError(f"unknown cache mode {cache!r}")
+        self.cache_mode = cache
+        if cache == "paged":
+            self.pager = PagedCacheView(
+                model, n_slots, max_len, block_size, n_blocks
+            )
+            self.cache = self.pager.init_cache()
+        else:
+            self.pager = None
+            self.cache = model.init_cache(n_slots, max_len)
         self.spec = model.cache_spec()
+        self._paged = self.pager is not None and self.pager.paged
         self._lengths = np.zeros((n_slots,), np.int32)   # host-side per slot
         self._last_token = np.zeros((n_slots,), np.int32)
         # jitted-dispatch counters (benchmarks assert O(1) prefill admission)
-        self.stats: Dict[str, int] = {"decode_calls": 0, "prefill_calls": 0}
+        # + cache-memory gauges (refreshed by _update_gauges)
+        self.stats: Dict[str, Any] = {
+            "decode_calls": 0, "prefill_calls": 0, "chunk_calls": 0,
+            "preemptions": 0,
+        }
 
         can_prefill = (
             hasattr(model, "prefill") and self.cfg.frontend is None
@@ -105,13 +152,36 @@ class ServingEngine:
             raise ValueError(
                 f"model {self.cfg.name!r} cannot use prefill admission"
             )
+        if cache == "paged" and admission == "replay" and self._paged:
+            raise ValueError(
+                "replay admission writes through dense slot stripes; "
+                "use admission='prefill' with the paged cache"
+            )
         self.admission = admission
 
-        self._decode = jax.jit(
-            lambda cache, toks: model.decode_step(
-                params, peft, cache, {"tokens": toks}
-            )
+        self.prefill_chunk = prefill_chunk
+        self._can_chunk = (
+            prefill_chunk is not None
+            and admission == "prefill"
+            and hasattr(model, "prefill_chunk")
         )
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be positive")
+        # at most one in-flight chunked admission (req, slot, staged, pos)
+        self._chunking: Optional[Dict[str, Any]] = None
+
+        if self._paged:
+            self._decode = jax.jit(
+                lambda cache, toks, bt: model.decode_step(
+                    params, peft, cache, {"tokens": toks}, block_tables=bt
+                )
+            )
+        else:
+            self._decode = jax.jit(
+                lambda cache, toks: model.decode_step(
+                    params, peft, cache, {"tokens": toks}
+                )
+            )
         self._prefill = (
             jax.jit(
                 lambda toks, lens: model.prefill(
@@ -121,24 +191,105 @@ class ServingEngine:
             if admission == "prefill"
             else None
         )
+        self._chunk_fn = (
+            jax.jit(
+                lambda staged, toks, pos, n_valid: model.prefill_chunk(
+                    params, peft, {"tokens": toks}, staged, pos, n_valid
+                )
+            )
+            if self._can_chunk
+            else None
+        )
+        self._update_gauges()
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_len:
             raise ValueError("prompt longer than engine max_len")
+        if self._paged:
+            # worst-case demand including generation: a request that could
+            # never fit alone would livelock admission/preemption forever.
+            worst = min(
+                len(req.prompt) + req.max_new_tokens, self.max_len
+            )
+            need = self.pager.blocks_for(worst)
+            usable = self.pager.allocator.n_blocks - 1
+            if need > usable:
+                raise ValueError(
+                    f"request needs up to {need} blocks but the pool only "
+                    f"has {usable}; it could never be admitted"
+                )
         self.queue.append(req)
 
+    @staticmethod
+    def _tokens(req: Request) -> List[int]:
+        """Admission token stream: a preempted request re-admits with its
+        generated tokens as part of the prompt (recompute-style resume —
+        prefill over the full prefix is numerically identical to having
+        kept decoding, which is exactly the replay/prefill equivalence
+        the engine tests pin down)."""
+        return req.prompt + req.output if req.output else req.prompt
+
     def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slots) if r is None]
+        reserved = (
+            {self._chunking["slot"]} if self._chunking is not None else set()
+        )
+        return [
+            i for i, r in enumerate(self.slots)
+            if r is None and i not in reserved
+        ]
+
+    def _update_gauges(self) -> None:
+        if self.pager is not None:
+            self.stats.update(self.pager.stats())
+        else:
+            if "cache_bytes_allocated" not in self.stats:
+                total = sum(
+                    leaf.nbytes
+                    for leaf in jax.tree_util.tree_leaves(self.cache)
+                )
+                self.stats.update(
+                    blocks_in_use=0, blocks_total=0, peak_blocks_in_use=0,
+                    cache_bytes_allocated=int(total),
+                    peak_block_utilization=0.0,
+                )
+
+    def _bucket(self, n: int) -> int:
+        return min(-(-n // self.seq_bucket) * self.seq_bucket, self.max_len)
 
     # ------------------------------------------------------------ admission
     def _admit(self) -> None:
+        self._step_chunked()
         free = self._free_slots()
         if not free or not self.queue:
             return
         wave: List[Request] = []
         while self.queue and len(wave) < len(free):
+            nxt = self.queue[0]
+            n_tok = len(self._tokens(nxt))
+            if self._paged and not self.pager.can_admit(n_tok):
+                break                     # blocks exhausted: wait for frees
+            if self._can_chunk and n_tok > self.prefill_chunk:
+                # long prompt: route through the chunked pipeline (one at
+                # a time); shorter prompts behind it may still wave-admit
+                # into the remaining free slots this tick.
+                if self._chunking is None:
+                    self._start_chunked(
+                        self.queue.popleft(), free[len(wave)]
+                    )
+                    free = [
+                        s for s in free if s != self._chunking["slot"]
+                    ]
+                    continue
+                break
+            if self._paged:
+                # reserve NOW (alloc at pop time): later wave members and
+                # the mid-decode alloc-on-append see the reduced pool, so
+                # admission can never tear mid-wave on a MemoryError.
+                self.pager.ensure(free[len(wave)], n_tok)
             wave.append(self.queue.popleft())
+        if not wave:
+            return
         if self.admission == "prefill":
             self._admit_prefill(free, wave)
         else:
@@ -147,23 +298,21 @@ class ServingEngine:
     def _admit_prefill(self, free: Sequence[int], wave: List[Request]) -> None:
         """Fast path: ONE jitted prefill over the right-padded wave, then
         scatter the resulting cache stripes into the free slots."""
-        lengths = np.array([len(r.prompt) for r in wave], np.int32)
-        bucket = self.seq_bucket
-        s = min(-(-int(lengths.max()) // bucket) * bucket, self.max_len)
+        streams = [self._tokens(r) for r in wave]
+        lengths = np.array([len(p) for p in streams], np.int32)
+        s = self._bucket(int(lengths.max()))
         # fixed (n_slots, bucketed_s) shape: bounded compile count
         toks = np.zeros((self.n_slots, s), np.int32)
         lens = np.ones((self.n_slots,), np.int32)   # dummy rows: length 1
-        for row, req in enumerate(wave):
-            toks[row, : len(req.prompt)] = req.prompt
-            lens[row] = len(req.prompt)
+        for row, p in enumerate(streams):
+            toks[row, : len(p)] = p
+            lens[row] = len(p)
         logits, wave_cache = self._prefill(
             jnp.asarray(toks), jnp.asarray(lens)
         )
         self.stats["prefill_calls"] += 1
         slot_ids = np.asarray(free[: len(wave)], np.int32)
-        self.cache = self.model.insert_cache(
-            self.cache, slot_ids, wave_cache
-        )
+        self._insert_wave(slot_ids, wave_cache, lengths)
         first = np.asarray(
             jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32
         )
@@ -173,6 +322,83 @@ class ServingEngine:
             tok = int(first[row])
             self._last_token[slot] = tok
             req.output.append(tok)
+        self._update_gauges()
+
+    def _insert_wave(self, slot_ids, wave_cache, lengths) -> None:
+        """Land a prefill wave (or a finished chunked staging buffer) in
+        the serving cache — dense slot scatter, or block-table scatter
+        after allocating each row's blocks."""
+        if self._paged:
+            for slot, n in zip(slot_ids, lengths):
+                self.pager.ensure(int(slot), int(n))
+            ext = self.pager.wave_page_extent(wave_cache)
+            nb = -(-ext // self.pager.block_size)
+            tables = self.pager.wave_tables(slot_ids, nb)
+            self.cache = self.model.insert_cache(
+                self.cache, slot_ids, wave_cache, block_tables=tables
+            )
+        else:
+            self.cache = self.model.insert_cache(
+                self.cache, slot_ids, wave_cache
+            )
+
+    # --------------------------------------------------- chunked admission
+    def _start_chunked(self, req: Request, slot: int) -> None:
+        # The staging buffer must be CHUNK-aligned, not just seq-bucketed:
+        # every chunk writes a full (1, C) K/V slab at pos, and a buffer
+        # shorter than ceil(len/C)*C would make the final slab's
+        # dynamic_update_slice clamp its start and overwrite earlier rows.
+        # It may exceed max_len by < C + seq_bucket; the insert scatter
+        # slices oversized staging axes back down to the cache extent.
+        c = self.prefill_chunk
+        tokens = self._tokens(req)
+        need = -(-len(tokens) // c) * c
+        s_stage = -(-need // self.seq_bucket) * self.seq_bucket
+        if self._paged:
+            # reserve the whole prompt's blocks up front (the wave loop
+            # checked can_admit): chunked admission can then never lose
+            # the race against concurrent wave admissions or appends.
+            self.pager.ensure(slot, len(tokens))
+        self._chunking = {
+            "req": req,
+            "slot": slot,
+            "tokens": tokens,
+            "staged": self.model.init_cache(1, s_stage),
+            "pos": 0,
+        }
+
+    def _step_chunked(self) -> None:
+        """Advance the in-flight chunked admission by ONE chunk (called
+        once per tick, so decode steps interleave between chunks)."""
+        if self._chunking is None:
+            return
+        st = self._chunking
+        req, c = st["req"], self.prefill_chunk
+        tokens = st["tokens"]
+        pos = st["pos"]
+        n_valid = min(c, len(tokens) - pos)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :n_valid] = tokens[pos : pos + n_valid]
+        logits, st["staged"] = self._chunk_fn(
+            st["staged"], jnp.asarray(toks), pos, n_valid
+        )
+        self.stats["chunk_calls"] += 1
+        st["pos"] = pos + n_valid
+        if st["pos"] < len(tokens):
+            return
+        # final chunk: first token + the SAME insert_cache scatter as a wave
+        slot = st["slot"]
+        self._insert_wave(
+            np.asarray([slot], np.int32), st["staged"],
+            np.asarray([len(tokens)], np.int32),
+        )
+        tok = int(jnp.argmax(logits[0, 0, : self.cfg.vocab_size]))
+        self.slots[slot] = req
+        self._lengths[slot] = len(tokens)
+        self._last_token[slot] = tok
+        req.output.append(tok)
+        self._chunking = None
+        self._update_gauges()
 
     def _admit_replay(self, free: Sequence[int], wave: List[Request]) -> None:
         """Fallback: prompts replay token-by-token through ``decode_step``
@@ -206,17 +432,59 @@ class ServingEngine:
                     self._last_token[slot] = nxt
                     req.output.append(nxt)
 
+    def _preempt(self, slot: int) -> None:
+        """Recompute-style preemption (vLLM): free the slot's blocks and
+        push the request back to the queue FRONT — it re-admits later
+        with ``prompt + output`` as its prefill prefix, which continues
+        the greedy stream exactly where it stopped."""
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self.pager.release(slot)
+        self.queue.appendleft(req)
+        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
         self._admit()
         active = np.array([r is not None for r in self.slots])
         if not active.any():
             return
+        if self._paged:
+            # alloc-on-append: the incoming token may cross a block
+            # boundary.  When the pool is exhausted mid-decode, preempt
+            # the highest slot that still needs growth — its blocks free
+            # immediately, the remaining slots keep decoding this tick,
+            # and the victim resumes by re-prefilling its prefix.
+            for i in range(self.n_slots):
+                if not active[i]:
+                    continue
+                try:
+                    self.pager.ensure(i, int(self._lengths[i]) + 1)
+                except MemoryError:
+                    # the victim always frees >= 1 block (an active slot
+                    # holds at least its prompt's first block), so the
+                    # retried ensure (one extra block) cannot fail.
+                    for victim in range(self.n_slots - 1, i - 1, -1):
+                        if active[victim]:
+                            self._preempt(victim)
+                            active[victim] = False
+                            break
+                    if active[i]:                    # victim was not i
+                        self.pager.ensure(i, int(self._lengths[i]) + 1)
+            if not active.any():
+                return
         toks = jnp.asarray(self._last_token.reshape(-1, 1))
-        logits, new_cache = self._decode(self.cache, toks)
+        if self._paged:
+            # inactive/preempted slots write into the null block
+            logits, new_cache = self._decode(
+                self.cache, toks, self.pager.device_tables()
+            )
+        else:
+            logits, new_cache = self._decode(self.cache, toks)
         self.stats["decode_calls"] += 1
         self.cache = merge_cache_slots(
-            self.spec, new_cache, self.cache, active
+            self.spec, new_cache, self.cache, active,
+            skip_paged=self._paged,
         )
         nxt = np.asarray(
             jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32
@@ -233,9 +501,15 @@ class ServingEngine:
                     self._lengths[i] >= self.max_len - 1:
                 req.done = True
                 self.slots[i] = None
+                if self._paged:
+                    self.pager.release(i)   # free-on-eviction
+        if self._paged:
+            self._update_gauges()
 
     def run(self, max_ticks: int = 10_000) -> None:
         ticks = 0
-        while (self.queue or any(self.slots)) and ticks < max_ticks:
+        while (
+            self.queue or any(self.slots) or self._chunking is not None
+        ) and ticks < max_ticks:
             self.step()
             ticks += 1

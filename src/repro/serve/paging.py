@@ -1,0 +1,277 @@
+"""vLLM-style paged KV-cache subsystem (host-side control plane).
+
+The dense serving cache reserves ``max_len`` rows of KV/state per slot
+whether a request uses 12 tokens or 12k.  This module replaces those
+stripes with **block pools** for every cache leaf whose ``cache_spec()``
+entry is a ``PagedCacheLeafSpec`` (transformer KV prefixes, Griffin's
+local-attention ring buffers); O(1) recurrent-state leaves (LRU/SSM/conv
+states, ``len``) stay dense.  Three pieces:
+
+* ``BlockAllocator`` — a free-list over ``n_blocks`` physical blocks of
+  ``block_size`` tokens.  Physical block 0 is reserved as the **null
+  block**: scatter padding and decode writes of freed slots land there
+  (and are never read back), which keeps every device-side shape static
+  regardless of per-slot occupancy.
+* ``PagedCacheView`` — per-model glue: derives the pool layout from the
+  model's ``cache_spec()`` + dense ``init_cache`` shapes, owns the
+  per-slot block tables (allocate on admission, extend on append, free on
+  eviction) and exports the device-side table the models' paged
+  ``decode_step``/``insert_cache`` paths consume.  Exported tables repeat
+  each slot's last allocated block into unallocated entries, so the paged
+  decode kernel's revisited index maps issue no extra block fetches.
+* accounting — ``blocks_in_use`` / ``bytes_allocated`` / peak-utilization
+  gauges surfaced through ``ServingEngine.stats`` and
+  ``benchmarks/serve_bench.py``.
+
+Device-side consumers live next to their dense counterparts: the block
+scatter in ``repro.models.common.scatter_cache_slots``, the paged decode
+paths of each model family, and the scalar-prefetch Pallas kernel
+``repro.kernels.flash_attention.paged_flash_decode_attention``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import PagedCacheLeafSpec
+
+__all__ = ["BlockAllocator", "PagedCacheView", "NULL_BLOCK"]
+
+# Physical pool row 0: never allocated, absorbs padded/ignored writes.
+NULL_BLOCK = 0
+
+
+class BlockAllocator:
+    """LIFO free-list over ``n_blocks`` physical cache blocks.
+
+    Block ``NULL_BLOCK`` is reserved and never handed out.  Double-free
+    and foreign-block frees raise — the allocator is the single source of
+    truth for block ownership, so corruption here silently cross-wires
+    two requests' caches.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need at least one allocatable block + null")
+        self.n_blocks = n_blocks
+        # pop() hands out low ids first (cosmetic, deterministic tests);
+        # the set shadows the list so the double-free guard stays O(1)
+        # per block on the engine's free-on-eviction hot path.
+        self._free: List[int] = list(range(n_blocks - 1, NULL_BLOCK, -1))
+        self._free_set = set(self._free)
+        self.peak_in_use = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"paged cache out of blocks: want {n}, have {len(self._free)}"
+            )
+        blocks = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(blocks)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return blocks
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            b = int(b)
+            if not (NULL_BLOCK < b < self.n_blocks):
+                raise ValueError(f"freeing invalid block id {b}")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+            self._free_set.add(b)
+
+
+class PagedCacheView:
+    """Paged layout + block tables for one model's decode cache.
+
+    ``tokens_per_slot`` is the dense page extent (``max_len`` for
+    transformer KV, ``local_window`` for Griffin rings) — a slot never
+    holds more than ``ceil(tokens_per_slot / block_size)`` blocks.  With
+    no ``PagedCacheLeafSpec`` leaves (Mamba2: all state O(1)) the view is
+    trivially dense: ``paged`` is False and ``init_cache`` returns the
+    model's dense cache unchanged.
+    """
+
+    def __init__(self, model, n_slots: int, max_len: int, block_size: int,
+                 n_blocks: Optional[int] = None, dtype=None):
+        if block_size < 1:
+            raise ValueError("block_size must be positive")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.dtype = dtype
+        self.spec = model.cache_spec()
+        self._dense_shapes = jax.eval_shape(
+            lambda: model.init_cache(n_slots, max_len, dtype)
+        )
+        extents = {
+            leaf.shape[ls.page_axis]
+            for ls, leaf in zip(
+                jax.tree_util.tree_leaves(self.spec),
+                jax.tree_util.tree_leaves(self._dense_shapes),
+            )
+            if isinstance(ls, PagedCacheLeafSpec)
+        }
+        if len(extents) > 1:
+            raise ValueError(f"paged leaves disagree on extent: {extents}")
+        self.paged = bool(extents)
+        self.tokens_per_slot = extents.pop() if extents else 0
+        self.max_blocks_per_slot = -(-self.tokens_per_slot // block_size)
+        if n_blocks is None:
+            # worst case (every slot full) + the null block: paged mode is
+            # then strictly safe; under-provision deliberately to overcommit.
+            n_blocks = n_slots * self.max_blocks_per_slot + 1
+        self.allocator = BlockAllocator(n_blocks) if self.paged else None
+        self._tables = np.zeros(
+            (n_slots, max(self.max_blocks_per_slot, 1)), np.int32
+        )
+        self._counts = np.zeros((n_slots,), np.int32)
+        self._device_tables = None  # refreshed lazily after table edits
+        self._bytes_per_block = 0.0  # filled by init_cache
+
+    # ----------------------------------------------------------- pool init
+    def _pool_shape(self, ls: PagedCacheLeafSpec, dense_shape):
+        s_ax, p_ax = ls.slot_axis, ls.page_axis
+        if p_ax != s_ax + 1:
+            raise ValueError("paged leaf needs page_axis == slot_axis + 1")
+        return (
+            dense_shape[:s_ax]
+            + (self.allocator.n_blocks, self.block_size)
+            + dense_shape[p_ax + 1:]
+        )
+
+    def init_cache(self) -> Dict[str, Any]:
+        """Zero-filled cache: block pools for paged leaves, the model's
+        dense layout for everything else."""
+        bytes_per_block = 0.0
+
+        def one(ls, sd):
+            nonlocal bytes_per_block
+            if self.paged and isinstance(ls, PagedCacheLeafSpec):
+                shape = self._pool_shape(ls, sd.shape)
+                leaf = jnp.zeros(shape, sd.dtype)
+                bytes_per_block += leaf.nbytes / self.allocator.n_blocks
+                return leaf
+            return jnp.zeros(sd.shape, sd.dtype)
+
+        cache = jax.tree_util.tree_map(one, self.spec, self._dense_shapes)
+        self._bytes_per_block = bytes_per_block
+        self._dense_bytes = sum(
+            leaf.nbytes
+            for ls, leaf in zip(
+                jax.tree_util.tree_leaves(self.spec),
+                jax.tree_util.tree_leaves(cache),
+            )
+            if not (self.paged and isinstance(ls, PagedCacheLeafSpec))
+        )
+        return cache
+
+    # ------------------------------------------------------- block tables
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks a slot needs to hold ``n_tokens`` (ring-capped)."""
+        return -(-min(n_tokens, self.tokens_per_slot) // self.block_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (not self.paged) or (
+            self.blocks_for(n_tokens) <= self.allocator.available
+        )
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot``'s table to cover ``n_tokens`` (alloc-on-append)."""
+        if not self.paged:
+            return
+        need = self.blocks_for(n_tokens)
+        have = int(self._counts[slot])
+        if need <= have:
+            return
+        new = self.allocator.alloc(need - have)
+        self._tables[slot, have:need] = new
+        self._counts[slot] = need
+        self._device_tables = None
+
+    def release(self, slot: int) -> None:
+        if not self.paged:
+            return
+        c = int(self._counts[slot])
+        if c:
+            self.allocator.free(self._tables[slot, :c])
+        self._tables[slot, :] = NULL_BLOCK
+        self._counts[slot] = 0
+        self._device_tables = None
+
+    def device_tables(self) -> jnp.ndarray:
+        """(n_slots, max_blocks_per_slot) int32 device table.
+
+        Entries past a slot's allocated count repeat its LAST allocated
+        block, so the paged decode kernel's clamp-free index maps revisit
+        an already-fetched block (no extra DMA) while the in-range entries
+        stay exact.  Fully-freed rows are all ``NULL_BLOCK``.
+        """
+        if self._device_tables is None:
+            t = self._tables.copy()
+            for slot in range(self.n_slots):
+                c = int(self._counts[slot])
+                if 0 < c < t.shape[1]:
+                    t[slot, c:] = t[slot, c - 1]
+            self._device_tables = jnp.asarray(t)
+        return self._device_tables
+
+    def wave_page_extent(self, wave_cache) -> int:
+        """Token (page-axis) extent of a prefill wave's paged leaves — the
+        bucketed prompt length for KV prefixes, ``local_window`` for ring
+        buffers.  Defines how many logical blocks the wave scatter spans."""
+        for ls, leaf in zip(
+            jax.tree_util.tree_leaves(self.spec),
+            jax.tree_util.tree_leaves(wave_cache),
+        ):
+            if isinstance(ls, PagedCacheLeafSpec):
+                return leaf.shape[ls.page_axis]
+        raise ValueError("wave cache has no paged leaves")
+
+    def wave_tables(self, slot_ids, n_logical_blocks: int) -> np.ndarray:
+        """(len(slot_ids), n_logical_blocks) scatter table for a prefill
+        wave: allocated blocks per row, ``NULL_BLOCK`` padding beyond each
+        row's count (pad-token garbage lands in the null block)."""
+        out = np.full((len(slot_ids), n_logical_blocks), NULL_BLOCK, np.int32)
+        for row, slot in enumerate(slot_ids):
+            c = min(int(self._counts[slot]), n_logical_blocks)
+            out[row, :c] = self._tables[slot, :c]
+        return out
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        if not self.paged:
+            return {
+                "blocks_in_use": 0,
+                "blocks_total": 0,
+                "peak_blocks_in_use": 0,
+                "cache_bytes_allocated": int(
+                    getattr(self, "_dense_bytes", 0)
+                ),
+                "peak_block_utilization": 0.0,
+            }
+        alloc = self.allocator
+        usable = alloc.n_blocks - 1
+        return {
+            "blocks_in_use": alloc.in_use,
+            "blocks_total": usable,
+            "peak_blocks_in_use": alloc.peak_in_use,
+            "cache_bytes_allocated": int(
+                self._dense_bytes + alloc.in_use * self._bytes_per_block
+            ),
+            "peak_block_utilization": alloc.peak_in_use / usable,
+        }

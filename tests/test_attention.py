@@ -126,9 +126,10 @@ def test_decode_ragged_lengths_parity():
     )
 
 
-def test_decode_non_divisible_cache_falls_back():
-    """A cache length the KV block doesn't divide routes to the reference
-    path (documented fallback) instead of erroring."""
+def test_decode_non_divisible_cache_stays_on_pallas():
+    """A cache length the KV block doesn't divide is pad+sliced inside the
+    kernel wrapper (the q_block fix applied to decode): the Pallas path
+    stays engaged — flash-kernel numerics, reference-level parity."""
     q = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 8))
     kc = jax.random.normal(jax.random.PRNGKey(1), (2, 37, 2, 8))
     vc = jax.random.normal(jax.random.PRNGKey(2), (2, 37, 2, 8))
@@ -136,7 +137,7 @@ def test_decode_non_divisible_cache_falls_back():
     ref = decode_attention(q, kc, vc, lens)
     out = decode_attention(q, kc, vc, lens, kv_block=16, backend="pallas")
     np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
-                               rtol=1e-6, atol=1e-6)
+                               rtol=3e-5, atol=3e-5)
 
 
 def test_unknown_backend_raises():
