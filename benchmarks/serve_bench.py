@@ -15,26 +15,47 @@ compiles):
   pool cache (``cache="paged"``): rows report the engine's cache-memory
   gauges (``peak bytes allocated``, ``peak blocks``, peak utilization)
   next to the dense stripes' constant footprint, and outputs are asserted
-  token-for-token identical to dense.
+  token-for-token identical to dense,
+* **sharded engine** (``--sharded``) — the same dense/paged engines on a
+  2x`data` . 4x`model` mesh over 8 virtual CPU devices
+  (``ServingEngine(mesh=...)``): rows report per-host cache bytes and
+  outputs are asserted token-for-token identical to the single-device
+  engine.  ``--sharded`` must be on the command line at process start —
+  it forces ``--xla_force_host_platform_device_count=8`` before jax
+  initializes.
 
 CSV rows via ``benchmarks.common.csv_row``:
-``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>`` and
-``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``.
+``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``,
+``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``
+and ``serve_sharded_<family>_<dense|paged>, ...``.
 
 ``--smoke`` (CI gate) runs the transformer family only, with the paged
-vs dense equivalence assertion intact.
+vs dense (and, with ``--sharded``, sharded vs single-device) equivalence
+assertions intact.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --sharded needs 8 virtual devices, and the device count can only be set
+# before jax first initializes — so peek at argv ahead of the jax import.
+if "--sharded" in sys.argv and "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
 
 import jax
 import numpy as np
 
 from benchmarks.common import csv_row
 from repro.configs import get_smoke
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve import Request, ServingEngine
 
@@ -84,7 +105,7 @@ def _run_wave(engine, prompts, uid0=0):
     return admit_s, admit_calls, toks, admit_s + drain_s, outs
 
 
-def bench_family(family: str, arch: str):
+def bench_family(family: str, arch: str, sharded: bool = False):
     cfg = get_smoke(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -107,7 +128,10 @@ def bench_family(family: str, arch: str):
             f"calls/wave={admit_calls} toks/s={toks / total_s:.0f} "
             f"wave={N_SLOTS}x{PROMPT_LEN}tok",
         ))
-    rows.extend(bench_cache_modes(family, model, params))
+    cache_rows, dense_outs = bench_cache_modes(family, model, params)
+    rows.extend(cache_rows)
+    if sharded:
+        rows.extend(bench_sharded(family, model, params, dense_outs))
     return rows
 
 
@@ -140,15 +164,50 @@ def bench_cache_modes(family: str, model, params):
     assert outs["paged"] == outs["dense"], (
         f"{family}: paged cache diverged from dense"
     )
+    return rows, outs["dense"]
+
+
+def bench_sharded(family: str, model, params, base):
+    """Mesh-sharded engine (2x`data` . 4x`model` over 8 virtual CPU
+    devices) vs the single-device engine: latency, per-host cache bytes,
+    and a token-for-token equivalence assert for dense AND paged
+    (``base`` = the single-device outputs bench_cache_modes measured on
+    the same waves)."""
+    if jax.device_count() < 8:
+        raise SystemExit(
+            "--sharded needs 8 devices; pass it on the command line so "
+            "the device-count flag applies before jax initializes"
+        )
+    mesh = make_host_mesh(2, 4)
+    rows = []
+    for mode in ("dense", "paged"):
+        engine = ServingEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            admission="prefill", cache=mode, block_size=BLOCK_SIZE,
+            mesh=mesh,
+        )
+        _run_wave(engine, _prompts(N_SLOTS, seed=1))          # warmup/compile
+        admit_s, _calls, toks, total_s, outs = _run_wave(
+            engine, _prompts(N_SLOTS, seed=2), uid0=100
+        )
+        assert outs == base, (
+            f"{family}: sharded {mode} engine diverged from single-device"
+        )
+        rows.append(csv_row(
+            f"serve_sharded_{family}_{mode}",
+            admit_s * 1e6,
+            f"toks/s={toks / total_s:.0f} mesh=2x4 "
+            f"host_bytes={engine.stats['cache_bytes_allocated']}",
+        ))
     return rows
 
 
-def main(smoke: bool = False) -> None:
+def main(smoke: bool = False, sharded: bool = False) -> None:
     families = (
         {"transformer": FAMILIES["transformer"]} if smoke else FAMILIES
     )
     for family, arch in families.items():
-        for row in bench_family(family, arch):
+        for row in bench_family(family, arch, sharded=sharded):
             print(row)
 
 
@@ -156,6 +215,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: transformer family only")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add mesh-sharded engine rows (forces 8 virtual "
+                         "CPU devices; must be set at process start)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(smoke=args.smoke)
+    main(smoke=args.smoke, sharded=args.sharded)

@@ -15,12 +15,22 @@ The merged engine serves through the PAGED KV cache (``cache="paged"``:
 block-pool cache, block tables allocated at admission and freed on
 completion — see ``repro.serve.paging``) while the adapter engine keeps
 dense slot stripes, so the token-for-token assert below also exercises
-paged == dense equivalence end to end."""
+paged == dense equivalence end to end.
+
+The merged engine is also MESH-AWARE (``mesh=make_host_mesh(...)``):
+weights shard over the `model` axis (decode TP rules), cache slots and
+paged block-pool arenas over `data`, and every jitted serving call
+carries explicit in/out shardings.  This example builds a mesh over
+whatever devices exist (1x1 on a laptop — same code, trivial layout; run
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see a
+real 2x`data` . 4x`model` layout, which generates the SAME tokens —
+that equivalence is CI-gated in tests/test_sharded_serve.py)."""
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
+from repro.launch.mesh import make_host_mesh
 from repro.core.peft import PeftConfig, attach, merge_all
 from repro.data import ByteTokenizer, SyntheticSeq2Task
 from repro.models import build_model
@@ -46,9 +56,13 @@ def main():
 
     merged = merge_all(state.params, state.peft)
 
+    # serve sharded when devices allow: slots + block arenas over `data`,
+    # weights + KV heads/head_dim over `model` (1x1 mesh on one device)
+    n_dev = jax.device_count()
+    mesh = make_host_mesh(2, 4) if n_dev >= 8 else make_host_mesh(1, 1)
     engine = ServingEngine(model, merged, n_slots=4, max_len=64,
                            admission="prefill", cache="paged",
-                           block_size=16)
+                           block_size=16, mesh=mesh)
     engine_adapter = ServingEngine(model, state.params, state.peft,
                                    n_slots=4, max_len=64,
                                    admission="prefill")
@@ -70,6 +84,8 @@ def main():
     print(f"paged engine stats: {engine.stats} "
           f"(prefill admission: O(1) jitted calls per wave; blocks freed "
           f"on completion)")
+    print(f"mesh: {dict(mesh.shape)} over {n_dev} device(s); cache bytes "
+          f"are per-host (addressable) memory")
 
 
 if __name__ == "__main__":

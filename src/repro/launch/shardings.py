@@ -17,6 +17,14 @@ Strategy (DESIGN.md §5):
   the head_dim axis (GQA head counts like 10 or 8 don't divide 16; the
   head_dim=128 always does).  Batch shards over DP only when divisible
   (long_500k has B=1 -> replicated).
+* **Paged serving pools** — cache leaves whose ``cache_spec()`` entry is a
+  ``PagedCacheLeafSpec`` lose their (slot, token) axes to an
+  ``(n_blocks, block_size)`` pool under ``ServingEngine(cache="paged")``:
+  the block-pool axis shards over DP (each data shard owns an arena of
+  physical blocks, see ``repro.serve.paging``), the ``block_size`` axis is
+  never sharded (a block is the DMA unit of the paged decode kernel), and
+  KV-heads/head_dim keep the model rule.  Block tables stay host-side and
+  replicated — they are scalar-prefetch arguments, not cache state.
 
 All rules are (regex over leaf path) -> PartitionSpec templates applied to
 the TRAILING dims, so the same rule covers scan-stacked ``(L, ...)`` and
@@ -35,7 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.peft import flatten_paths
 from repro.launch.mesh import dp_axes
-from repro.models.common import ModelConfig
+from repro.models.common import ModelConfig, PagedCacheLeafSpec
 
 __all__ = [
     "param_shardings",
@@ -151,42 +159,80 @@ def batch_shardings(mesh: Mesh, batch_tree: Any) -> Any:
 
 
 def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
-                    seq_shard: bool = False) -> Any:
+                    seq_shard: bool = False, spec: Any = None,
+                    paged: bool = False,
+                    pool_data_shards: Optional[int] = None) -> Any:
     """Decode caches: batch over DP; KV-heads or head_dim over model.
 
     ``seq_shard`` (§Perf hillclimb, flash-decoding-style split-S): shard
     the KV cache's SEQUENCE dim over `model` instead of head_dim — the
     per-step collective becomes an fp32 score-row gather instead of a
     bf16 gather of the cache itself (GQA head counts like 36 don't divide
-    16, so hd-sharding otherwise forces GSPMD to regather K/V)."""
+    16, so hd-sharding otherwise forces GSPMD to regather K/V).
+
+    ``spec`` (the model's ``cache_spec()`` pytree, mirroring
+    ``cache_tree``) + ``paged=True`` switches ``PagedCacheLeafSpec``
+    leaves to the POOL layout rule: the block-pool axis (at
+    ``spec.slot_axis``) shards over DP, the ``block_size`` axis (at
+    ``spec.page_axis``) is never sharded, and only dims past it (KV
+    heads / head_dim) take the model rule — so e.g. the Griffin ring's
+    ``pos`` pool ``(nm, n_blocks, block_size)`` gets
+    ``P(None, dp, None)`` and a 36-KV-head pool on an 8-way model axis
+    falls through to head_dim.  Dense leaves (and everything when
+    ``paged=False``) keep the slot-stripe rules above.
+
+    ``pool_data_shards`` (serving engine) gates the pool-axis DP rule on
+    the allocator's ACTUAL arena count: the pool may only shard over DP
+    when block indices are arena-partitioned to match
+    (``paging.PagedCacheView(data_shards=...)``), else a degraded
+    allocator (e.g. ``n_slots`` not divisible) would hand out global
+    rows into a physically partitioned pool — every decode gather would
+    cross shards.  ``None`` keeps the divisibility-only rule."""
     dp = dp_axes(mesh)
     axis_sizes = dict(mesh.shape)
     dp_size = math.prod(axis_sizes[a] for a in dp)
     model_size = axis_sizes.get("model", 1)
+    has_model = "model" in axis_sizes
 
-    def assign(path_elems, leaf):
+    def pool_assign(ls: PagedCacheLeafSpec, shape) -> NamedSharding:
+        pspec: list = [None] * len(shape)
+        if dp and shape[ls.slot_axis] % dp_size == 0 and \
+                (pool_data_shards is None or pool_data_shards == dp_size):
+            pspec[ls.slot_axis] = dp      # block-pool axis over DP arenas
+        for dim in range(len(shape) - 1, ls.page_axis, -1):
+            if has_model and shape[dim] % model_size == 0 and \
+                    shape[dim] >= model_size:
+                pspec[dim] = "model"
+                break
+        return _ns(mesh, P(*pspec))
+
+    def assign(path_elems, leaf, leaf_spec=None):
+        if paged and isinstance(leaf_spec, PagedCacheLeafSpec):
+            return pool_assign(leaf_spec, leaf.shape)
         path = "/".join(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in path_elems
         )
         shape = leaf.shape
-        spec: list = [None] * len(shape)
+        spec_: list = [None] * len(shape)
         # batch dim: caches are (L, B, ...) except tail_* / len which are (B, ...)
         b_dim = 0 if (path.startswith("tail_") or path == "len") else 1
         if len(shape) > b_dim and shape[b_dim] % dp_size == 0 and dp:
-            spec[b_dim] = dp
+            spec_[b_dim] = dp
         if seq_shard and path in ("k", "v") and len(shape) == 5 and \
                 shape[2] % model_size == 0:
-            spec[2] = "model"            # (L, B, S, KV, hd): split S
-            return _ns(mesh, P(*spec))
+            spec_[2] = "model"            # (L, B, S, KV, hd): split S
+            return _ns(mesh, P(*spec_))
         # last-two dims heuristic: (.., KV, hd) / (.., W, dr) / (.., hs, hd)
         for dim in range(len(shape) - 1, b_dim, -1):
-            if spec[dim] is None and shape[dim] % model_size == 0 and \
+            if spec_[dim] is None and shape[dim] % model_size == 0 and \
                     shape[dim] >= model_size and path not in ("len",) and \
                     "pos" not in path:
-                spec[dim] = "model"
+                spec_[dim] = "model"
                 break
-        return _ns(mesh, P(*spec))
+        return _ns(mesh, P(*spec_))
 
+    if spec is not None:
+        return jax.tree_util.tree_map_with_path(assign, cache_tree, spec)
     return jax.tree_util.tree_map_with_path(assign, cache_tree)
 
 

@@ -29,6 +29,7 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import MASK_VALUE, masked_softmax
@@ -166,6 +167,59 @@ def decode_attention(
     return out.reshape(b, 1, h, hd)
 
 
+def _sharded_paged_flash(q, k_pool, v_pool, block_tables, cache_len,
+                         window, mesh):
+    """Run the paged flash-decode kernel per data shard under
+    ``shard_map``.
+
+    The pool's block axis is sharded over the mesh's DP axes and the
+    block allocator is arena-partitioned to match
+    (``paging.PagedCacheView(data_shards=D)``): every block index a slot
+    ever holds lives inside the arena of the shard that owns the slot,
+    so each shard's kernel call only needs ``table - shard * arena_rows``
+    to address its local pool partition — no cross-device gathers, and
+    the opaque Pallas call never has to be replicated by GSPMD.  Any
+    `model`-axis sharding of the KV-head/head_dim dims is gathered at the
+    ``shard_map`` boundary (the kernel grid iterates KV heads whole).
+
+    Returns None when the mesh cannot partition the call (no DP axis, or
+    batch/pool rows not divisible) — the caller falls back to the plain
+    global-table kernel, which is always correct.
+    """
+    # local imports: models must stay importable without the launch
+    # package mid-initialization (launch.shardings imports models.common)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    sizes = dict(mesh.shape)
+    d_total = math.prod(sizes[a] for a in dp) if dp else 1
+    b, n_pool = q.shape[0], k_pool.shape[0]
+    if d_total <= 1 or b % d_total or n_pool % d_total:
+        return None
+
+    local_rows = n_pool // d_total
+
+    def local_call(q_l, k_l, v_l, bt_l, len_l):
+        shard = jnp.int32(0)
+        for ax in dp:
+            shard = shard * sizes[ax] + jax.lax.axis_index(ax)
+        bt_local = bt_l - shard * local_rows   # arena-local pool rows
+        return paged_flash_decode_attention(
+            q_l, k_l, v_l, bt_local, len_l, window=window
+        )
+
+    return shard_map(
+        local_call, mesh,
+        in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp)),
+        out_specs=P(dp),
+        check_rep=False,
+    )(q, k_pool, v_pool, block_tables.astype(jnp.int32),
+      cache_len.astype(jnp.int32))
+
+
 def paged_decode_attention(
     q: jnp.ndarray,               # (B, 1, H, hd) — one new token
     k_pool: jnp.ndarray,          # (n_blocks, block_size, KV, hd)
@@ -176,6 +230,7 @@ def paged_decode_attention(
     window: Optional[int] = None,
     fast_softmax: bool = False,
     backend: str = "reference",
+    mesh=None,
 ) -> jnp.ndarray:
     """Single-step attention over a paged KV pool.  Returns
     ``(B, 1, H, hd)``.
@@ -188,9 +243,21 @@ def paged_decode_attention(
     its last allocated block (``paging.PagedCacheView.device_tables``):
     the duplicated rows land at logical positions ``>= cache_len`` where
     the length mask hides them.
+
+    ``mesh`` (sharded serving, pallas backend only) wraps the kernel in
+    ``shard_map`` over the mesh's data axes with shard-local block
+    indices — callers must guarantee the pool is arena-partitioned to
+    match (``paging.PagedCacheView(data_shards=...)``); the serving
+    engine only threads the mesh through when that holds.
     """
     _check_backend(backend)
     if backend == "pallas":
+        if mesh is not None:
+            out = _sharded_paged_flash(
+                q, k_pool, v_pool, block_tables, cache_len, window, mesh
+            )
+            if out is not None:
+                return out
         return paged_flash_decode_attention(
             q, k_pool, v_pool, block_tables, cache_len, window=window
         )

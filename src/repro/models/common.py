@@ -25,6 +25,7 @@ __all__ = [
     "ShapeConfig",
     "CacheLeafSpec",
     "PagedCacheLeafSpec",
+    "place_cache",
     "reset_cache_slots",
     "merge_cache_slots",
     "insert_cache_slots",
@@ -198,6 +199,17 @@ class PagedCacheLeafSpec(CacheLeafSpec):
 
     page_axis: int = 2
     ring: bool = False
+
+
+def place_cache(cache, shardings):
+    """Annotate a freshly built decode cache with explicit shardings
+    (``launch.shardings.cache_shardings``); no-op when ``shardings`` is
+    None.  Every family's ``init_cache`` routes through this so a
+    mesh-aware serving engine starts from a cache that is already
+    partitioned — the first jitted step never has to repartition it."""
+    if shardings is None:
+        return cache
+    return jax.device_put(cache, shardings)
 
 
 def reset_cache_slots(spec, cache, slot_ids, skip_paged=False):

@@ -39,6 +39,7 @@ from repro.models.common import (
     gather_conv_tail,
     insert_cache_slots,
     make_rope,
+    place_cache,
     rms_norm,
 )
 from repro.models.transformer import _mask_vocab_pad, get_subtree, padded_vocab
@@ -422,7 +423,10 @@ class Griffin:
         )
 
     # ----------------------------------------------------------------- serve
-    def init_cache(self, batch: int, max_len: int, dtype=None):
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   shardings=None):
+        """Dense decode cache; ``shardings`` (``cache_shardings`` tree)
+        places every leaf at construction for mesh-aware serving."""
         cfg = self.cfg
         dt = dtype or cfg.param_dtype
         dr, w, km = self.d_rnn, cfg.local_window, cfg.conv_kernel - 1
@@ -440,7 +444,7 @@ class Griffin:
         for i in range(self.n_tail):
             cache[f"tail_lru{i + 1}"] = jnp.zeros((batch, dr), jnp.float32)
             cache[f"tail_conv{i + 1}"] = jnp.zeros((batch, km, dr), dt)
-        return cache
+        return place_cache(cache, shardings)
 
     def cache_spec(self) -> Dict[str, CacheLeafSpec]:
         """Slot layout of ``init_cache`` leaves (see CacheLeafSpec).
@@ -528,7 +532,12 @@ class Griffin:
         logits = x @ params["lm_head"].astype(cfg.compute_dtype)
         return logits, cache
 
-    def decode_step(self, params, peft, cache, batch, block_tables=None):
+    def decode_step(self, params, peft, cache, batch, block_tables=None,
+                    mesh=None):
+        """One decode step.  ``mesh`` is accepted for API uniformity with
+        the transformer family and ignored: the paged ring path is a
+        pure-JAX gather that GSPMD partitions directly (no opaque kernel
+        needing a ``shard_map`` wrapper)."""
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
         block_adapters = (peft or {}).get("blocks", {})

@@ -37,6 +37,7 @@ from repro.models.common import (
     fused_cross_entropy,
     gather_conv_tail,
     insert_cache_slots,
+    place_cache,
     rms_norm,
 )
 from repro.models.transformer import _mask_vocab_pad, get_subtree, padded_vocab
@@ -308,17 +309,20 @@ class Mamba2:
         return rms_norm(x, params["final_norm"], cfg.norm_eps)
 
     # ----------------------------------------------------------------- serve
-    def init_cache(self, batch: int, max_len: int, dtype=None):
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   shardings=None):
+        """Dense decode cache; ``shardings`` (``cache_shardings`` tree)
+        places every leaf at construction for mesh-aware serving."""
         cfg = self.cfg
         dt = dtype or cfg.param_dtype
         h, hd, hs = self.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
-        return {
+        return place_cache({
             "ssm": jnp.zeros((cfg.n_layers, batch, h, hs, hd), jnp.float32),
             "conv": jnp.zeros(
                 (cfg.n_layers, batch, cfg.conv_kernel - 1, self.conv_dim), dt
             ),
             "len": jnp.zeros((batch,), jnp.int32),
-        }
+        }, shardings)
 
     def cache_spec(self) -> Dict[str, CacheLeafSpec]:
         """Slot layout of ``init_cache`` leaves (see CacheLeafSpec)."""
@@ -372,8 +376,9 @@ class Mamba2:
         }
         return logits, cache
 
-    def decode_step(self, params, peft, cache, batch, block_tables=None):
-        del block_tables                 # no per-token leaves: always dense
+    def decode_step(self, params, peft, cache, batch, block_tables=None,
+                    mesh=None):
+        del block_tables, mesh           # no per-token leaves: always dense
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
         layer_adapters = (peft or {}).get("layers", {})

@@ -34,6 +34,7 @@ from repro.models.common import (
     fused_cross_entropy,
     insert_cache_slots,
     make_rope,
+    place_cache,
     rms_norm,
 )
 from repro.models.moe import moe_ffn
@@ -147,12 +148,15 @@ class Transformer:
         return x @ params["lm_head"].astype(cfg.compute_dtype)
 
     # ------------------------------------------------------------ layer body
-    def _attn(self, lp, la, x, *, rope, window, cache=None, chunk=None):
+    def _attn(self, lp, la, x, *, rope, window, cache=None, chunk=None,
+              mesh=None):
         """Attention sub-block.  ``cache=(k_cache, v_cache, cache_len)``
         for dense decode, ``(k_pool, v_pool, cache_len, block_tables)``
         for paged decode; ``chunk=(k_stage, v_stage, pos)`` for one
         chunked-prefill piece (``rope`` must already carry the chunk's
-        absolute positions).  Returns ``(out, new_kv)``."""
+        absolute positions).  ``mesh`` (sharded serving) lets the paged
+        flash-decode kernel run under ``shard_map`` with shard-local
+        block indices.  Returns ``(out, new_kv)``."""
         cfg = self.cfg
         b, s, d = x.shape
         q = peft_linear(x, lp["q_proj"], get_adapter(la, "q_proj"),
@@ -205,6 +209,7 @@ class Transformer:
             out = paged_decode_attention(
                 q, k_pool, v_pool, bt, cache_len, window=window,
                 fast_softmax=cfg.fast_softmax, backend=cfg.attn_backend,
+                mesh=mesh,
             )
             new_kv = (k_pool, v_pool)
         else:
@@ -231,11 +236,12 @@ class Transformer:
         )
 
     def _layer(self, lp, la, x, *, rope, cache=None, no_drop=None,
-               chunk=None):
+               chunk=None, mesh=None):
         cfg = self.cfg
         h, new_kv = self._attn(
             lp["attn"], get_subtree(la, "attn"), rms_norm(x, lp["ln1"], cfg.norm_eps),
             rope=rope, window=cfg.sliding_window, cache=cache, chunk=chunk,
+            mesh=mesh,
         )
         x = x + h
         hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -337,10 +343,13 @@ class Transformer:
         return ce + cfg.router_aux_weight * aux
 
     # ----------------------------------------------------------------- serve
-    def init_cache(self, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   shardings=None) -> Dict[str, Any]:
+        """Dense decode cache; ``shardings`` (``cache_shardings`` tree)
+        places every leaf at construction for mesh-aware serving."""
         cfg = self.cfg
         dt = dtype or cfg.param_dtype
-        return {
+        return place_cache({
             "k": jnp.zeros(
                 (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
             ),
@@ -348,7 +357,7 @@ class Transformer:
                 (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
             ),
             "len": jnp.zeros((batch,), jnp.int32),
-        }
+        }, shardings)
 
     def cache_spec(self) -> Dict[str, CacheLeafSpec]:
         """Slot layout of ``init_cache`` leaves.  The KV leaves carry a
@@ -416,14 +425,19 @@ class Transformer:
         cache = {"k": k, "v": v, "len": lens}
         return logits, cache
 
-    def decode_step(self, params, peft, cache, batch, block_tables=None):
+    def decode_step(self, params, peft, cache, batch, block_tables=None,
+                    mesh=None):
         """One decode step.  ``batch`` holds the single new token (or frame
         embedding); cache slots at ``len`` are written then attended.
 
         With ``block_tables`` (B, max_blocks) the KV leaves are paged
         block pools: each slot's new token is written into its
         table-resolved pool row and attention gathers KV blocks through
-        the table (``paged_decode_attention``).
+        the table (``paged_decode_attention``).  ``mesh`` (sharded
+        serving) is forwarded to the paged attention so its Pallas
+        backend can run per-shard under ``shard_map`` — the serving
+        engine only passes it when the pool's block arenas are
+        partitioned to match the mesh's data axes.
         """
         cfg = self.cfg
         if cfg.frontend == "audio_tokens":
@@ -445,7 +459,7 @@ class Transformer:
                 else (k_l, v_l, new_len, block_tables)
             )
             x, _aux, (k_l, v_l) = self._layer(
-                lp, la, x, rope=rope, cache=layer_cache
+                lp, la, x, rope=rope, cache=layer_cache, mesh=mesh
             )
             return x, (k_l, v_l)
 

@@ -1,5 +1,10 @@
 """Serving runtime: batched continuous-batching engine (dense or paged
-KV cache) over merged or adapter-attached models."""
+KV cache, single-device or mesh-sharded) over merged or adapter-attached
+models."""
 
 from repro.serve.engine import Request, ServingEngine
-from repro.serve.paging import BlockAllocator, PagedCacheView
+from repro.serve.paging import (
+    BlockAllocator,
+    PagedCacheView,
+    addressable_nbytes,
+)

@@ -59,26 +59,54 @@ admission) and cache-memory gauges (``cache_bytes_allocated``,
 ``blocks_in_use``, ``peak_block_utilization``, ...) that
 ``benchmarks/serve_bench.py`` reports for dense vs paged.
 
+Sharded serving (``mesh=...``, e.g. ``launch.mesh.make_host_mesh(2, 4)``):
+the engine becomes mesh-aware end to end —
+
+* **weights** are placed by the decode-time TP rules
+  (``launch.shardings.param_shardings(decode=True)``: column/row-parallel
+  projections over `model`, d_model-sharded embedding gathers) and PEFT
+  adapters are replicated,
+* **caches** are placed by ``launch.shardings.cache_shardings``: the slot
+  (batch) axis shards over the DP axes, KV-heads or head_dim over
+  `model`; paged block pools shard their block axis over DP with the
+  allocator partitioned into per-shard arenas
+  (``paging.PagedCacheView(data_shards=...)``) so block indices stay
+  shard-local, and block tables stay replicated host-side,
+* **every jitted entry point** (prefill wave, chunked prefill, fused
+  decode, and the ``insert_cache`` scatter — jitted only under a mesh)
+  carries explicit ``in_shardings``/``out_shardings``, so the cache
+  stays resident in its partitioned layout across ticks and no implicit
+  repartitioning happens at call boundaries,
+* with ``cfg.attn_backend="pallas"`` the paged decode kernel runs under
+  ``shard_map`` per data shard (``models.attention.paged_decode_attention``)
+  — per-shard block-table entries are translated to arena-local pool rows,
+* byte gauges report per-host (addressable) device memory
+  (``paging.addressable_nbytes``): a `model`-replicated leaf bills every
+  local copy, a DP-sharded pool bills only the local partition.
+
+Sharded and single-device engines produce token-for-token identical
+greedy outputs (pinned by ``tests/test_sharded_serve.py`` on 8 virtual
+CPU devices, for dense AND paged caches across all three families).
+
 Serving uses MERGED weights by default (paper §6: zero inference
 overhead); passing ``peft`` serves the adapter-attached model instead —
 numerically identical (tested).
-
-Remaining follow-on (ROADMAP): multi-host sharded serving (shard the slot
-axis; admission/scatter already runs as one jitted call).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import merge_cache_slots, reset_cache_slots
-from repro.serve.paging import PagedCacheView
+from repro.serve.paging import PagedCacheView, addressable_nbytes
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -109,11 +137,10 @@ class ServingEngine:
         block_size: int = 16,
         n_blocks: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
     ):
         self.model = model
         self.cfg = model.cfg
-        self.params = params
-        self.peft = peft
         self.n_slots = n_slots
         self.max_len = max_len
         self.seq_bucket = seq_bucket
@@ -122,16 +149,82 @@ class ServingEngine:
         if cache not in ("dense", "paged"):
             raise ValueError(f"unknown cache mode {cache!r}")
         self.cache_mode = cache
+        self.mesh = mesh
+        self.spec = model.cache_spec()
+
+        # --- mesh-aware layout: DP arena count for the paged allocator
+        # (slot axis must divide over the DP axes, else slots replicate
+        # and the pool stays a single global arena)
+        data_shards = 1
+        if mesh is not None:
+            from repro.launch.mesh import dp_axes
+
+            dp = dp_axes(mesh)
+            dp_size = math.prod(dict(mesh.shape)[a] for a in dp) if dp else 1
+            if dp_size > 1 and n_slots % dp_size == 0:
+                data_shards = dp_size
+
         if cache == "paged":
             self.pager = PagedCacheView(
-                model, n_slots, max_len, block_size, n_blocks
+                model, n_slots, max_len, block_size, n_blocks,
+                data_shards=data_shards,
             )
-            self.cache = self.pager.init_cache()
         else:
             self.pager = None
-            self.cache = model.init_cache(n_slots, max_len)
-        self.spec = model.cache_spec()
         self._paged = self.pager is not None and self.pager.paged
+
+        # --- explicit shardings for every jitted entry point
+        if mesh is not None:
+            from repro.launch.shardings import (
+                cache_shardings, param_shardings, replicated,
+            )
+
+            struct = (
+                self.pager.struct() if self.pager is not None
+                else jax.eval_shape(lambda: model.init_cache(n_slots, max_len))
+            )
+            self._cache_sh = cache_shardings(
+                self.cfg, mesh, struct, spec=self.spec, paged=self._paged,
+                pool_data_shards=(
+                    self.pager.data_shards if self._paged else None
+                ),
+            )
+            # prefill waves / chunked staging buffers are DENSE stripe
+            # layouts even under the paged cache (pools only hold landed
+            # tokens); shapes differ only along the unsharded token axis,
+            # so one sharding tree per batch extent serves every bucket.
+            self._wave_sh = cache_shardings(
+                self.cfg, mesh,
+                jax.eval_shape(lambda: model.init_cache(n_slots, seq_bucket)),
+                spec=self.spec, paged=False,
+            )
+            # chunked staging buffers are REPLICATED, not TP-sharded: the
+            # buffer holds one slot (negligible memory) and XLA's SPMD
+            # partitioner miscompiles the batch-1 chunk update when its
+            # head_dim is model-sharded on a mesh that also carries a
+            # data axis (wrong staged K/V values, jax 0.4.x CPU — the
+            # B=n_slots wave path partitions fine).  The landing
+            # ``insert_cache`` scatter re-shards into the partitioned
+            # serving cache.
+            self._chunk_sh = replicated(
+                mesh, jax.eval_shape(lambda: model.init_cache(1, seq_bucket))
+            )
+            self._repl = NamedSharding(mesh, P())
+            params = jax.device_put(
+                params, param_shardings(self.cfg, mesh, params, decode=True)
+            )
+            if peft is not None:
+                peft = jax.device_put(peft, replicated(mesh, peft))
+        else:
+            self._cache_sh = self._wave_sh = self._chunk_sh = None
+            self._repl = None
+        self.params = params
+        self.peft = peft
+        self.cache = (
+            self.pager.init_cache(shardings=self._cache_sh)
+            if self.pager is not None
+            else model.init_cache(n_slots, max_len, shardings=self._cache_sh)
+        )
         self._lengths = np.zeros((n_slots,), np.int32)   # host-side per slot
         self._last_token = np.zeros((n_slots,), np.int32)
         # jitted-dispatch counters (benchmarks assert O(1) prefill admission)
@@ -170,36 +263,81 @@ class ServingEngine:
         # at most one in-flight chunked admission (req, slot, staged, pos)
         self._chunking: Optional[Dict[str, Any]] = None
 
+        # the mesh reaches the model's paged attention only when the pool
+        # arenas match the mesh's DP axes (shard-local block indices hold)
+        decode_mesh = (
+            mesh if self._paged and self.pager.data_shards > 1 else None
+        )
+
+        def _jit(fn, in_sh=None, out_sh=None):
+            """jit with explicit in/out shardings under a mesh, plain jit
+            otherwise — every device entry point goes through here."""
+            if mesh is None:
+                return jax.jit(fn)
+            return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+        cache_sh, wave_sh, chunk_sh = (
+            self._cache_sh, self._wave_sh, self._chunk_sh
+        )
+        repl = self._repl
         if self._paged:
-            self._decode = jax.jit(
+            self._decode = _jit(
                 lambda cache, toks, bt: model.decode_step(
-                    params, peft, cache, {"tokens": toks}, block_tables=bt
-                )
+                    params, peft, cache, {"tokens": toks}, block_tables=bt,
+                    mesh=decode_mesh,
+                ),
+                in_sh=(cache_sh, repl, repl),
+                out_sh=(repl, cache_sh),
             )
         else:
-            self._decode = jax.jit(
+            self._decode = _jit(
                 lambda cache, toks: model.decode_step(
                     params, peft, cache, {"tokens": toks}
-                )
+                ),
+                in_sh=(cache_sh, repl),
+                out_sh=(repl, cache_sh),
             )
         self._prefill = (
-            jax.jit(
+            _jit(
                 lambda toks, lens: model.prefill(
                     params, peft, {"tokens": toks}, lengths=lens
-                )
+                ),
+                in_sh=(repl, repl),
+                out_sh=(repl, wave_sh),
             )
             if admission == "prefill"
             else None
         )
         self._chunk_fn = (
-            jax.jit(
+            _jit(
                 lambda staged, toks, pos, n_valid: model.prefill_chunk(
                     params, peft, {"tokens": toks}, staged, pos, n_valid
-                )
+                ),
+                in_sh=(chunk_sh, repl, repl, repl),
+                out_sh=(repl, chunk_sh),
             )
             if self._can_chunk
             else None
         )
+        # the insert scatter runs eagerly on one device (current behavior)
+        # but becomes a jitted call with explicit shardings under a mesh —
+        # the wave lands in the partitioned cache without a host gather.
+        # `None` entries leave the wave/staging input as committed (wave
+        # buffers arrive already sharded from the prefill/chunk jits; the
+        # two layouts differ in batch extent, so one spec can't cover
+        # both).  Compile count is bounded: wave sizes <= n_slots, token
+        # extents bucketed.
+        def _insert(cache, ids, wave, bt):
+            return model.insert_cache(cache, ids, wave, block_tables=bt)
+
+        if mesh is None:
+            self._insert_fn = _insert
+        else:
+            self._insert_fn = jax.jit(
+                _insert,
+                in_shardings=(cache_sh, repl, None, None),
+                out_shardings=cache_sh,
+            )
         self._update_gauges()
 
     # ------------------------------------------------------------- frontend
@@ -213,11 +351,11 @@ class ServingEngine:
                 len(req.prompt) + req.max_new_tokens, self.max_len
             )
             need = self.pager.blocks_for(worst)
-            usable = self.pager.allocator.n_blocks - 1
+            usable = self.pager.max_request_blocks
             if need > usable:
                 raise ValueError(
-                    f"request needs up to {need} blocks but the pool only "
-                    f"has {usable}; it could never be admitted"
+                    f"request needs up to {need} blocks but a pool arena "
+                    f"only has {usable}; it could never be admitted"
                 )
         self.queue.append(req)
 
@@ -244,8 +382,11 @@ class ServingEngine:
             self.stats.update(self.pager.stats())
         else:
             if "cache_bytes_allocated" not in self.stats:
+                # per-host (addressable) bytes, not the logical global
+                # size: a sharded cache bills only local partitions, a
+                # model-replicated leaf bills every local copy.
                 total = sum(
-                    leaf.nbytes
+                    addressable_nbytes(leaf)
                     for leaf in jax.tree_util.tree_leaves(self.cache)
                 )
                 self.stats.update(
@@ -267,8 +408,19 @@ class ServingEngine:
         while self.queue and len(wave) < len(free):
             nxt = self.queue[0]
             n_tok = len(self._tokens(nxt))
-            if self._paged and not self.pager.can_admit(n_tok):
-                break                     # blocks exhausted: wait for frees
+            if self._paged:
+                # pick a remaining free slot whose ARENA can hold the
+                # request (under a mesh each data shard allocates from
+                # its own arena): a full arena must not head-of-line
+                # block admission into another shard's free slots.
+                cand = next(
+                    (j for j in range(len(wave), len(free))
+                     if self.pager.can_admit(n_tok, free[j])),
+                    None,
+                )
+                if cand is None:
+                    break             # no arena has room: wait for frees
+                free[len(wave)], free[cand] = free[cand], free[len(wave)]
             if self._can_chunk and n_tok > self.prefill_chunk:
                 # long prompt: route through the chunked pipeline (one at
                 # a time); shorter prompts behind it may still wave-admit
@@ -334,12 +486,12 @@ class ServingEngine:
             ext = self.pager.wave_page_extent(wave_cache)
             nb = -(-ext // self.pager.block_size)
             tables = self.pager.wave_tables(slot_ids, nb)
-            self.cache = self.model.insert_cache(
-                self.cache, slot_ids, wave_cache, block_tables=tables
+            self.cache = self._insert_fn(
+                self.cache, slot_ids, wave_cache, tables
             )
         else:
-            self.cache = self.model.insert_cache(
-                self.cache, slot_ids, wave_cache
+            self.cache = self._insert_fn(
+                self.cache, slot_ids, wave_cache, None
             )
 
     # --------------------------------------------------- chunked admission
@@ -363,7 +515,9 @@ class ServingEngine:
             "req": req,
             "slot": slot,
             "tokens": tokens,
-            "staged": self.model.init_cache(1, s_stage),
+            "staged": self.model.init_cache(
+                1, s_stage, shardings=self._chunk_sh
+            ),
             "pos": 0,
         }
 
@@ -461,11 +615,16 @@ class ServingEngine:
                 try:
                     self.pager.ensure(i, int(self._lengths[i]) + 1)
                 except MemoryError:
-                    # the victim always frees >= 1 block (an active slot
+                    # the victim must share slot i's block arena (under a
+                    # mesh each data shard allocates from its own arena)
+                    # and always frees >= 1 block there (an active slot
                     # holds at least its prompt's first block), so the
-                    # retried ensure (one extra block) cannot fail.
+                    # retried ensure (one extra block) cannot fail —
+                    # worst case the victim is slot i itself.
+                    shard = self.pager.shard_of(i)
                     for victim in range(self.n_slots - 1, i - 1, -1):
-                        if active[victim]:
+                        if active[victim] and \
+                                self.pager.shard_of(victim) == shard:
                             self._preempt(victim)
                             active[victim] = False
                             break

@@ -21,7 +21,21 @@ states, ``len``) stay dense.  Three pieces:
   decode kernel's revisited index maps issue no extra block fetches.
 * accounting — ``blocks_in_use`` / ``bytes_allocated`` / peak-utilization
   gauges surfaced through ``ServingEngine.stats`` and
-  ``benchmarks/serve_bench.py``.
+  ``benchmarks/serve_bench.py``.  Byte gauges count **per-host
+  (addressable) device memory**: the sum of every leaf's addressable
+  shards, so a pool replicated across a `model` axis bills each copy and
+  a DP-sharded pool bills only the local partition.
+
+Sharded serving (``data_shards > 1``, set by ``ServingEngine(mesh=...)``):
+the physical pool axis is sharded over the mesh's DP axes, and the
+allocator is partitioned into one **arena per data shard** — slot ``s``
+(itself DP-sharded by the engine's cache rules) allocates only from the
+arena of the shard that owns it, and each arena reserves its own local
+null row (global row ``shard * arena_size``).  Every block index a shard
+ever sees therefore stays inside its own pool partition, which is what
+lets the paged flash-decode kernel run under ``shard_map`` with a plain
+``table - shard * arena_size`` translation instead of cross-device
+gathers (``repro.models.attention.paged_decode_attention``).
 
 Device-side consumers live next to their dense counterparts: the block
 scatter in ``repro.models.common.scatter_cache_slots``, the paged decode
@@ -39,10 +53,26 @@ import numpy as np
 
 from repro.models.common import PagedCacheLeafSpec
 
-__all__ = ["BlockAllocator", "PagedCacheView", "NULL_BLOCK"]
+__all__ = [
+    "BlockAllocator", "PagedCacheView", "NULL_BLOCK", "addressable_nbytes",
+]
 
 # Physical pool row 0: never allocated, absorbs padded/ignored writes.
+# With arena-partitioned pools every arena reserves its own local row 0
+# (global row ``shard * arena_size``); NULL_BLOCK is the single-shard case.
 NULL_BLOCK = 0
+
+
+def addressable_nbytes(leaf) -> int:
+    """Per-host device bytes held by ``leaf``: the sum of its addressable
+    shards.  Counts replication across local devices (a leaf replicated
+    over a 4-way `model` axis on one host costs 4x its logical size) and
+    only the local partition of DP-sharded leaves; equals ``leaf.nbytes``
+    for a plain single-device array or a ShapeDtypeStruct."""
+    shards = getattr(leaf, "addressable_shards", None)
+    if shards is None:
+        return int(leaf.nbytes)
+    return int(sum(s.data.nbytes for s in shards))
 
 
 class BlockAllocator:
@@ -103,12 +133,22 @@ class PagedCacheView:
     no ``PagedCacheLeafSpec`` leaves (Mamba2: all state O(1)) the view is
     trivially dense: ``paged`` is False and ``init_cache`` returns the
     model's dense cache unchanged.
+
+    ``data_shards > 1`` (sharded serving) partitions the pool into equal
+    per-shard arenas — slot ``s`` belongs to shard
+    ``s // (n_slots / data_shards)`` (matching a ``P(dp)`` slot-axis
+    sharding's contiguous chunks) and allocates only from that shard's
+    arena, whose local row 0 is its null block.  ``n_blocks`` is rounded
+    up to a multiple of ``data_shards`` so arenas stay equal.
     """
 
     def __init__(self, model, n_slots: int, max_len: int, block_size: int,
-                 n_blocks: Optional[int] = None, dtype=None):
+                 n_blocks: Optional[int] = None, dtype=None,
+                 data_shards: int = 1):
         if block_size < 1:
             raise ValueError("block_size must be positive")
+        if data_shards < 1:
+            raise ValueError("data_shards must be positive")
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
@@ -129,19 +169,62 @@ class PagedCacheView:
         if len(extents) > 1:
             raise ValueError(f"paged leaves disagree on extent: {extents}")
         self.paged = bool(extents)
+        self.data_shards = data_shards if self.paged else 1
+        if self.paged and n_slots % self.data_shards:
+            raise ValueError(
+                f"n_slots {n_slots} must divide evenly across "
+                f"{self.data_shards} data shards"
+            )
         self.tokens_per_slot = extents.pop() if extents else 0
         self.max_blocks_per_slot = -(-self.tokens_per_slot // block_size)
         if n_blocks is None:
-            # worst case (every slot full) + the null block: paged mode is
-            # then strictly safe; under-provision deliberately to overcommit.
-            n_blocks = n_slots * self.max_blocks_per_slot + 1
-        self.allocator = BlockAllocator(n_blocks) if self.paged else None
+            # worst case (every slot full) + one null block per arena:
+            # paged mode is then strictly safe; under-provision
+            # deliberately to overcommit.
+            n_blocks = n_slots * self.max_blocks_per_slot + self.data_shards
+        elif n_blocks % self.data_shards:
+            n_blocks += self.data_shards - n_blocks % self.data_shards
+        self.n_blocks = n_blocks if self.paged else 0
+        self.arena_size = n_blocks // self.data_shards if self.paged else 0
+        # one allocator per arena, handing out LOCAL rows (1..arena_size);
+        # tables store GLOBAL rows (shard * arena_size + local).
+        self._arenas = (
+            [BlockAllocator(self.arena_size) for _ in range(self.data_shards)]
+            if self.paged else None
+        )
+        # single-shard back-compat handle (tests & callers poke gauges)
+        self.allocator = (
+            self._arenas[0] if self.paged and self.data_shards == 1 else None
+        )
         self._tables = np.zeros(
             (n_slots, max(self.max_blocks_per_slot, 1)), np.int32
         )
+        if self.paged:
+            for slot in range(n_slots):
+                self._tables[slot, :] = self.null_of(self.shard_of(slot))
         self._counts = np.zeros((n_slots,), np.int32)
         self._device_tables = None  # refreshed lazily after table edits
         self._bytes_per_block = 0.0  # filled by init_cache
+        self._dense_bytes = 0        # filled by init_cache
+
+    # ------------------------------------------------------------- sharding
+    def shard_of(self, slot: int) -> int:
+        """Data shard owning ``slot`` (contiguous chunks, matching a
+        ``P(dp)`` sharding of the cache's slot axis)."""
+        if not self.paged or self.data_shards == 1:
+            return 0
+        return int(slot) // (self.n_slots // self.data_shards)
+
+    def null_of(self, shard: int) -> int:
+        """Global pool row of ``shard``'s null block (its arena's row 0)."""
+        return shard * self.arena_size
+
+    @property
+    def max_request_blocks(self) -> int:
+        """Largest allocation a single request can ever hold: one arena
+        minus its null row (a request lives entirely in its slot's
+        arena)."""
+        return self.arena_size - 1
 
     # ----------------------------------------------------------- pool init
     def _pool_shape(self, ls: PagedCacheLeafSpec, dense_shape):
@@ -150,34 +233,52 @@ class PagedCacheView:
             raise ValueError("paged leaf needs page_axis == slot_axis + 1")
         return (
             dense_shape[:s_ax]
-            + (self.allocator.n_blocks, self.block_size)
+            + (self.n_blocks, self.block_size)
             + dense_shape[p_ax + 1:]
         )
 
-    def init_cache(self) -> Dict[str, Any]:
-        """Zero-filled cache: block pools for paged leaves, the model's
-        dense layout for everything else."""
-        bytes_per_block = 0.0
+    def struct(self) -> Dict[str, Any]:
+        """ShapeDtypeStructs of the serving cache layout (pools for paged
+        leaves, dense otherwise) — what ``launch.shardings.cache_shardings``
+        assigns placements against before any allocation."""
 
         def one(ls, sd):
-            nonlocal bytes_per_block
             if self.paged and isinstance(ls, PagedCacheLeafSpec):
-                shape = self._pool_shape(ls, sd.shape)
-                leaf = jnp.zeros(shape, sd.dtype)
-                bytes_per_block += leaf.nbytes / self.allocator.n_blocks
-                return leaf
+                return jax.ShapeDtypeStruct(
+                    self._pool_shape(ls, sd.shape), sd.dtype
+                )
+            return jax.ShapeDtypeStruct(sd.shape, sd.dtype)
+
+        return jax.tree_util.tree_map(one, self.spec, self._dense_shapes)
+
+    def init_cache(self, shardings: Any = None) -> Dict[str, Any]:
+        """Zero-filled cache: block pools for paged leaves, the model's
+        dense layout for everything else.  ``shardings`` (a NamedSharding
+        tree mirroring ``struct()``) places every leaf at construction;
+        the byte gauges are then derived from the PLACED leaves, so they
+        report per-host (addressable) memory — see ``addressable_nbytes``.
+        """
+
+        def one(ls, sd):
+            if self.paged and isinstance(ls, PagedCacheLeafSpec):
+                return jnp.zeros(self._pool_shape(ls, sd.shape), sd.dtype)
             return jnp.zeros(sd.shape, sd.dtype)
 
         cache = jax.tree_util.tree_map(one, self.spec, self._dense_shapes)
+        if shardings is not None:
+            cache = jax.device_put(cache, shardings)
+        bytes_per_block = 0.0
+        dense_bytes = 0
+        for ls, leaf in zip(
+            jax.tree_util.tree_leaves(self.spec),
+            jax.tree_util.tree_leaves(cache),
+        ):
+            if self.paged and isinstance(ls, PagedCacheLeafSpec):
+                bytes_per_block += addressable_nbytes(leaf) / self.n_blocks
+            else:
+                dense_bytes += addressable_nbytes(leaf)
         self._bytes_per_block = bytes_per_block
-        self._dense_bytes = sum(
-            leaf.nbytes
-            for ls, leaf in zip(
-                jax.tree_util.tree_leaves(self.spec),
-                jax.tree_util.tree_leaves(cache),
-            )
-            if not (self.paged and isinstance(ls, PagedCacheLeafSpec))
-        )
+        self._dense_bytes = dense_bytes
         return cache
 
     # ------------------------------------------------------- block tables
@@ -185,31 +286,39 @@ class PagedCacheView:
         """Blocks a slot needs to hold ``n_tokens`` (ring-capped)."""
         return -(-min(n_tokens, self.tokens_per_slot) // self.block_size)
 
-    def can_admit(self, n_tokens: int) -> bool:
+    def can_admit(self, n_tokens: int, slot: int = 0) -> bool:
+        """Whether ``slot``'s arena can hold ``n_tokens`` right now."""
         return (not self.paged) or (
-            self.blocks_for(n_tokens) <= self.allocator.available
+            self.blocks_for(n_tokens)
+            <= self._arenas[self.shard_of(slot)].available
         )
 
     def ensure(self, slot: int, n_tokens: int) -> None:
-        """Grow ``slot``'s table to cover ``n_tokens`` (alloc-on-append)."""
+        """Grow ``slot``'s table to cover ``n_tokens`` (alloc-on-append),
+        from the slot's own arena — block indices never leave the data
+        shard that owns the slot."""
         if not self.paged:
             return
         need = self.blocks_for(n_tokens)
         have = int(self._counts[slot])
         if need <= have:
             return
-        new = self.allocator.alloc(need - have)
-        self._tables[slot, have:need] = new
+        shard = self.shard_of(slot)
+        local = self._arenas[shard].alloc(need - have)
+        base = self.null_of(shard)
+        self._tables[slot, have:need] = [base + b for b in local]
         self._counts[slot] = need
         self._device_tables = None
 
     def release(self, slot: int) -> None:
         if not self.paged:
             return
+        shard = self.shard_of(slot)
+        base = self.null_of(shard)
         c = int(self._counts[slot])
         if c:
-            self.allocator.free(self._tables[slot, :c])
-        self._tables[slot, :] = NULL_BLOCK
+            self._arenas[shard].free(self._tables[slot, :c] - base)
+        self._tables[slot, :] = base
         self._counts[slot] = 0
         self._device_tables = None
 
@@ -219,7 +328,8 @@ class PagedCacheView:
         Entries past a slot's allocated count repeat its LAST allocated
         block, so the paged decode kernel's clamp-free index maps revisit
         an already-fetched block (no extra DMA) while the in-range entries
-        stay exact.  Fully-freed rows are all ``NULL_BLOCK``.
+        stay exact.  Fully-freed rows all point at the slot's arena null
+        block (``NULL_BLOCK`` when unsharded).
         """
         if self._device_tables is None:
             t = self._tables.copy()
@@ -244,11 +354,13 @@ class PagedCacheView:
 
     def wave_tables(self, slot_ids, n_logical_blocks: int) -> np.ndarray:
         """(len(slot_ids), n_logical_blocks) scatter table for a prefill
-        wave: allocated blocks per row, ``NULL_BLOCK`` padding beyond each
-        row's count (pad-token garbage lands in the null block)."""
-        out = np.full((len(slot_ids), n_logical_blocks), NULL_BLOCK, np.int32)
+        wave: allocated blocks per row, each row's arena null block as
+        padding beyond its count (pad-token garbage lands in the null
+        block of the shard that owns the slot)."""
+        out = np.zeros((len(slot_ids), n_logical_blocks), np.int32)
         for row, slot in enumerate(slot_ids):
             c = min(int(self._counts[slot]), n_logical_blocks)
+            out[row, :] = self.null_of(self.shard_of(int(slot)))
             out[row, :c] = self._tables[slot, :c]
         return out
 
@@ -259,19 +371,20 @@ class PagedCacheView:
                 "blocks_in_use": 0,
                 "blocks_total": 0,
                 "peak_blocks_in_use": 0,
-                "cache_bytes_allocated": int(
-                    getattr(self, "_dense_bytes", 0)
-                ),
+                "cache_bytes_allocated": int(self._dense_bytes),
                 "peak_block_utilization": 0.0,
             }
-        alloc = self.allocator
-        usable = alloc.n_blocks - 1
+        in_use = sum(a.in_use for a in self._arenas)
+        usable = self.n_blocks - self.data_shards     # minus arena nulls
+        # per-arena peaks can land at different ticks, so the sum is a
+        # conservative (upper-bound) concurrent peak
+        peak = sum(a.peak_in_use for a in self._arenas)
         return {
-            "blocks_in_use": alloc.in_use,
+            "blocks_in_use": in_use,
             "blocks_total": usable,
-            "peak_blocks_in_use": alloc.peak_in_use,
+            "peak_blocks_in_use": peak,
             "cache_bytes_allocated": int(
-                self._dense_bytes + alloc.in_use * self._bytes_per_block
+                self._dense_bytes + in_use * self._bytes_per_block
             ),
-            "peak_block_utilization": alloc.peak_in_use / usable,
+            "peak_block_utilization": peak / usable,
         }
