@@ -22,16 +22,29 @@ compiles):
   outputs are asserted token-for-token identical to the single-device
   engine.  ``--sharded`` must be on the command line at process start —
   it forces ``--xla_force_host_platform_device_count=8`` before jax
-  initializes.
+  initializes,
+* **adapter serving modes** — the four ways the engine serves PEFT state,
+  same wave each time, token-for-token asserts between them:
+  ``single`` (one QuanTA ``AdapterSet`` for every request,
+  ``peft_backend="reference"``), ``pallas`` (same set through the fused
+  QuanTA kernels, parity-asserted against ``single``), ``bank8`` (an
+  8-tenant ``AdapterBank`` — the QuanTA set + 7 LoRA tenants — with a
+  2x``N_SLOTS`` wave round-robined across ALL 8 tenants; the QuanTA
+  tenant's and a LoRA tenant's requests are asserted identical to their
+  dedicated single-tenant engines), and ``merged`` (``merge_all``
+  zero-overhead deployment, asserted identical to ``single``).  Rows
+  report tokens/sec plus the ``adapter_bytes`` / ``adapter_tenants``
+  gauges next to the cache bytes.
 
 CSV rows via ``benchmarks.common.csv_row``:
 ``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``,
-``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``
-and ``serve_sharded_<family>_<dense|paged>, ...``.
+``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``,
+``serve_adapters_<family>_<single|pallas|bank8|merged>, ...`` and
+``serve_sharded_<family>_<dense|paged>, ...``.
 
 ``--smoke`` (CI gate) runs the transformer family only, with the paged
-vs dense (and, with ``--sharded``, sharded vs single-device) equivalence
-assertions intact.
+vs dense, multi-adapter (bank8 / pallas / merged vs single), and — with
+``--sharded`` — sharded vs single-device equivalence assertions intact.
 """
 
 from __future__ import annotations
@@ -54,7 +67,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.configs import get_smoke
+from repro.configs import get_peft, get_smoke
+from repro.core.bank import AdapterBank
+from repro.core.peft import PeftConfig, attach, merge_all
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve import Request, ServingEngine
@@ -130,6 +145,7 @@ def bench_family(family: str, arch: str, sharded: bool = False):
         ))
     cache_rows, dense_outs = bench_cache_modes(family, model, params)
     rows.extend(cache_rows)
+    rows.extend(bench_adapter_modes(family, arch, cfg, model, params))
     if sharded:
         rows.extend(bench_sharded(family, model, params, dense_outs))
     return rows
@@ -165,6 +181,100 @@ def bench_cache_modes(family: str, model, params):
         f"{family}: paged cache diverged from dense"
     )
     return rows, outs["dense"]
+
+
+def bench_adapter_modes(family: str, arch: str, cfg, model, params):
+    """The four adapter serving modes over one wave: single AdapterSet
+    (reference vs pallas QuanTA kernels), an 8-tenant AdapterBank with
+    per-request selection, and merged zero-overhead deployment — with
+    token-for-token equivalence asserts (the multi-adapter CI gate).
+
+    The bank wave carries 2 x ``N_SLOTS`` requests round-robined over ALL
+    8 tenants (slot churn included), and per-request parity is asserted
+    for both a QuanTA tenant (bank row 1 of its group) and a LoRA tenant
+    against their dedicated single-tenant engines.
+    """
+    targets = get_peft(arch).targets
+    qbase, qset = attach(
+        jax.random.PRNGKey(1), params,
+        PeftConfig(method="quanta", scheme=None, n_axes=3, targets=targets),
+    )
+    n_wave = 2 * N_SLOTS                  # more requests than slots: churn
+    prompts = _prompts(n_wave, seed=2)
+
+    def measure(m, ps, peft=None, adapters=None, tenant_of=None):
+        engine = ServingEngine(m, ps, peft, adapters=adapters,
+                               n_slots=N_SLOTS, max_len=MAX_LEN)
+        for wave, uid0 in ((_prompts(n_wave, seed=1), 0), (prompts, 100)):
+            reqs = [
+                Request(uid=uid0 + i, prompt=list(p), max_new_tokens=MAX_NEW,
+                        adapter=tenant_of(i) if tenant_of else None)
+                for i, p in enumerate(wave)
+            ]
+            for r in reqs:
+                engine.submit(r)
+            t0 = time.perf_counter()           # warmup wave pays compiles
+            engine.run()
+            total_s = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in reqs)
+        return [r.output for r in reqs], toks / total_s, engine.stats
+
+    rows = []
+    single, tps, stats = measure(model, qbase, peft=qset)
+    rows.append(csv_row(
+        f"serve_adapters_{family}_single", 1e6 / tps,
+        f"toks/s={tps:.0f} adapter_bytes={stats['adapter_bytes']}",
+    ))
+    pl_model = build_model(cfg.replace(peft_backend="pallas"))
+    pallas, tps, stats = measure(pl_model, qbase, peft=qset)
+    assert pallas == single, (
+        f"{family}: peft_backend='pallas' diverged from reference"
+    )
+    rows.append(csv_row(
+        f"serve_adapters_{family}_pallas", 1e6 / tps,
+        f"toks/s={tps:.0f} parity=ok",
+    ))
+    # 8 tenants over ONE base: the QuanTA set + 7 perturbed LoRA sets
+    tenants = {"t0": (qbase, qset)}
+    for i in range(1, 8):
+        _, lset = attach(
+            jax.random.PRNGKey(10 + i), params,
+            PeftConfig(method="lora", rank=4, targets=targets),
+        )
+        tenants[f"t{i}"] = jax.tree_util.tree_map(
+            lambda x: x + 0.1 * jax.random.normal(
+                jax.random.PRNGKey(20 + i), x.shape, x.dtype
+            ),
+            lset,
+        )
+    bank = AdapterBank.build(params, tenants)
+    banked, tps, stats = measure(
+        model, params, adapters=bank, tenant_of=lambda i: f"t{i % 8}"
+    )
+    assert banked[0] == single[0], (
+        f"{family}: bank tenant t0 (QuanTA) diverged from its "
+        "single-tenant engine"
+    )
+    lora_single, _, _ = measure(model, params, peft=tenants["t1"])
+    assert banked[1] == lora_single[1], (
+        f"{family}: bank tenant t1 (LoRA) diverged from its "
+        "single-tenant engine"
+    )
+    rows.append(csv_row(
+        f"serve_adapters_{family}_bank8", 1e6 / tps,
+        f"toks/s={tps:.0f} tenants={stats['adapter_tenants']} "
+        f"adapter_bytes={stats['adapter_bytes']} "
+        f"cache_bytes={stats['cache_bytes_allocated']}",
+    ))
+    merged_out, tps, stats = measure(model, merge_all(qbase, qset))
+    assert merged_out == single, (
+        f"{family}: merged deployment diverged from adapter-attached"
+    )
+    rows.append(csv_row(
+        f"serve_adapters_{family}_merged", 1e6 / tps,
+        f"toks/s={tps:.0f} adapter_bytes={stats['adapter_bytes']}",
+    ))
+    return rows
 
 
 def bench_sharded(family: str, model, params, base):

@@ -21,6 +21,7 @@ from repro.core.quanta import (
     operator_einsum_expr,
     tensor_shapes,
 )
+from repro.core.adapters import Adapter, RebasedAdapter
 from repro.core.baselines import (
     BottleneckAdapter,
     DoraAdapter,
@@ -28,7 +29,10 @@ from repro.core.baselines import (
     LoraAdapter,
 )
 from repro.core.peft import (
+    AdapterLeafSpec,
+    AdapterSet,
     PeftConfig,
+    adapter_subtree,
     attach,
     count_params,
     get_adapter,
@@ -36,6 +40,7 @@ from repro.core.peft import (
     peft_linear,
     trainable_fraction,
 )
+from repro.core.bank import AdapterBank, BankedAdapter
 from repro.core.analysis import (
     effective_rank,
     operator_rank,

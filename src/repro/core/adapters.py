@@ -1,0 +1,142 @@
+"""The uniform ``Adapter`` protocol every PEFT method implements.
+
+QuanTA (``repro.core.quanta``) and the baselines (``repro.core.baselines``)
+all adapt a frozen linear ``y = x @ W0``.  This module fixes the contract
+the attachment layer (``repro.core.peft``), the models, and the
+multi-tenant serving bank (``repro.core.bank``) program against, so no
+caller ever dispatches on the concrete adapter class:
+
+* ``create(...)``        — classmethod/staticmethod constructor (per method).
+* ``apply(x, w, backend)``— the full adapted linear for weight ``w``.  The
+  default is the delta form ``x @ w + delta(x)``; weight-coupled methods
+  (DoRA) override it.  ``backend`` selects the fused Pallas path where one
+  exists (``cfg.peft_backend``); methods without a kernel ignore it.
+* ``delta(x)``           — the additive update ``x @ ΔW`` computed in
+  factored form.  Only meaningful when ``delta_form`` is True.
+* ``matrix()``           — the materialized ``(d_in, d_out)`` update ΔW.
+* ``merge(w)``           — deployment fold ``W = W0 + ΔW`` (paper §6: zero
+  inference overhead).  Default derives from ``matrix()``.
+* ``neutral(w)``         — a same-structure adapter whose ``apply(x, w)``
+  is exactly ``x @ w``.  This is the bank's id-0 / non-member entry: for
+  delta-form adapters it is the all-zeros pytree; DoRA overrides it
+  (zero low-rank factors but ``m`` must equal ``w``'s column norms).
+* ``num_params``         — trainable parameter count (paper "# Params (%)").
+* ``delta_form``         — class-level flag: True when ``apply`` decomposes
+  as ``x @ w + delta(x)`` with ``delta`` independent of ``w``.  The bank
+  uses it (statically) to pick the cheap summation path.
+
+Adapters are frozen ``jax.tree_util.register_dataclass`` pytrees: array
+fields are children (trainable, vmap/scan-stackable along a leading layer
+axis), hyperparameters are static.  The protocol methods therefore work
+unchanged under ``vmap`` — which is exactly how stacked (per-layer) and
+banked (per-request) application run.
+
+``RebasedAdapter`` pins a delta-form adapter to the base weight it was
+trained against: QuanTA's attach folds the frozen copy into the base
+(``W0' = W0 - S``, Eq. 8/9), so a QuanTA tenant in a shared-base serving
+bank must compute ``x @ W0'_tenant + delta(x)`` — NOT ``x @ W0_shared +
+delta(x)``.  Carrying the tenant's folded weight (instead of a dense
+correction added to the shared matmul) keeps banked application
+numerically identical to the single-tenant engine, which is what the
+token-for-token equivalence tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Adapter", "RebasedAdapter"]
+
+
+class Adapter:
+    """Protocol base class (mixin; concrete adapters are dataclasses)."""
+
+    # True when apply(x, w) == x @ w + delta(x) with delta independent of w
+    delta_form: ClassVar[bool] = True
+
+    # --- primitive surface each method provides -------------------------
+    def delta(self, x: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose a weight-independent "
+            "delta; use apply(x, w)"
+        )
+
+    def matrix(self) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no weight-independent update "
+            "matrix; use merge(w)"
+        )
+
+    # --- derived protocol methods ---------------------------------------
+    def apply(self, x: jnp.ndarray, w: jnp.ndarray,
+              backend: str = "reference") -> jnp.ndarray:
+        """Adapted linear ``y = x @ w + delta(x)`` (delta-form default)."""
+        del backend  # no fused kernel for the generic path
+        return x @ w + self.delta(x)
+
+    def merge(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Fold the trained update into the base weight (paper §6)."""
+        m = self.matrix()
+        return (w.astype(m.dtype) + m).astype(w.dtype)
+
+    def neutral(self, w: jnp.ndarray) -> "Adapter":
+        """Same-structure adapter with ``apply(x, w) == x @ w`` exactly.
+
+        For delta-form methods the all-zeros pytree is neutral (every
+        update here is (multi-)linear in its factors, so zero factors give
+        a zero delta).  Weight-coupled methods must override.
+        """
+        del w
+        return jax.tree_util.tree_map(jnp.zeros_like, self)
+
+    @property
+    def num_params(self) -> int:
+        return sum(int(l.size) for l in jax.tree_util.tree_leaves(self))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RebasedAdapter(Adapter):
+    """An adapter pinned to the base weight it was trained against.
+
+    ``apply(x, w)`` IGNORES the caller's (shared) ``w`` and computes
+    against the stored ``base`` — exactly the single-tenant computation,
+    bit for bit.  ``AdapterBank`` wraps QuanTA tenants with it because the
+    attach-time fold makes each tenant's effective base weight
+    tenant-specific (``W0' = W0 - S_tenant``); ``base`` is a frozen
+    serving artifact, not trainable state (``num_params`` counts the inner
+    adapter only).  ``delta_form`` is False: the update relative to the
+    *shared* base is not ``delta(x)`` alone.
+
+    The memory trade is explicit: one dense ``(d_in, d_out)`` weight per
+    QuanTA tenant per adapted path.  Serving tenants trained without a
+    fold (LoRA/KronA/DoRA) needs no rebase; a fold-free QuanTA training
+    mode that removes it is a recorded follow-up.
+    """
+
+    delta_form = False
+
+    inner: Any
+    base: jnp.ndarray                     # tenant's (d_in, d_out) base
+
+    def apply(self, x: jnp.ndarray, w: jnp.ndarray,
+              backend: str = "reference") -> jnp.ndarray:
+        del w
+        return self.inner.apply(x, self.base, backend)
+
+    def merge(self, w: jnp.ndarray) -> jnp.ndarray:
+        del w
+        return self.inner.merge(self.base)
+
+    def neutral(self, w: jnp.ndarray) -> "RebasedAdapter":
+        """Neutral = no-op inner against the SHARED base ``w`` (an
+        all-zeros pytree would replace the base weight with zeros)."""
+        return RebasedAdapter(self.inner.neutral(w), w)
+
+    @property
+    def num_params(self) -> int:
+        return self.inner.num_params

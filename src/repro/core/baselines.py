@@ -1,8 +1,10 @@
 """Baseline PEFT methods the paper compares against (§2, §7, App. F).
 
-All weight-level adapters share the ``delta(x)`` / ``matrix()`` /
-``merge(w0)`` protocol of :class:`repro.core.quanta.QuantaAdapter` so the
-attachment layer (``repro.core.peft``) treats them uniformly:
+All weight-level adapters implement the :class:`repro.core.adapters.Adapter`
+protocol (``apply(x, w)`` / ``delta(x)`` / ``matrix()`` / ``merge(w0)`` /
+``neutral(w0)`` / ``num_params``) so the attachment layer
+(``repro.core.peft``) and the serving bank (``repro.core.bank``) treat
+them uniformly — no per-method dispatch anywhere:
 
 * :class:`LoraAdapter`      — Hu et al. 2022 (``ΔW = B A``, rank r)
 * :class:`DoraAdapter`      — Liu et al. 2024 (magnitude/direction decomposition)
@@ -21,6 +23,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.adapters import Adapter
+
 __all__ = [
     "LoraAdapter",
     "DoraAdapter",
@@ -31,7 +35,7 @@ __all__ = [
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class LoraAdapter:
+class LoraAdapter(Adapter):
     """LoRA: ``y = x @ W0 + (alpha/r) * (x @ A) @ B`` (x@W convention).
 
     ``A (d_in, r)`` Gaussian init, ``B (r, d_out)`` zero init, so the update
@@ -75,13 +79,17 @@ class LoraAdapter:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class DoraAdapter:
+class DoraAdapter(Adapter):
     """DoRA: ``W' = m * (W0 + ΔW_lora) / ||W0 + ΔW_lora||_col``.
 
-    Unlike pure delta adapters, DoRA rescales the whole weight, so it exposes
-    ``forward(x, w0)`` instead of ``delta(x)``.  ``m`` initializes to the
-    column norms of ``W0`` so the layer starts exactly at the base model.
+    Unlike pure delta adapters, DoRA rescales the whole weight
+    (``delta_form = False``): ``apply(x, w0)`` computes against the
+    adapted weight, and ``neutral`` needs ``w0``'s column norms.  ``m``
+    initializes to the column norms of ``W0`` so the layer starts exactly
+    at the base model.
     """
+
+    delta_form = False
 
     a: jnp.ndarray
     b: jnp.ndarray
@@ -110,16 +118,26 @@ class DoraAdapter:
             w0.dtype
         )
 
-    def forward(self, x: jnp.ndarray, w0: jnp.ndarray) -> jnp.ndarray:
+    def apply(self, x: jnp.ndarray, w0: jnp.ndarray,
+              backend: str = "reference") -> jnp.ndarray:
+        del backend
         return x @ self.adapted_weight(w0)
 
     def merge(self, w0: jnp.ndarray) -> jnp.ndarray:
         return self.adapted_weight(w0)
 
+    def neutral(self, w0: jnp.ndarray) -> "DoraAdapter":
+        """No-op DoRA for ``w0``: zero low-rank factors, ``m`` = column
+        norms of ``w0`` (the all-zeros pytree would rescale ``w0`` to 0)."""
+        return DoraAdapter(
+            jnp.zeros_like(self.a), jnp.zeros_like(self.b),
+            jnp.linalg.norm(w0.astype(self.a.dtype), axis=0), self.alpha,
+        )
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class KronaAdapter:
+class KronaAdapter(Adapter):
     """KronA: ``ΔW = s * (A ⊗ B)`` with ``A (a_i, a_o)``, ``B (b_i, b_o)``,
     ``a_i*b_i = d_in``, ``a_o*b_o = d_out`` (x@W convention).
 

@@ -3,20 +3,36 @@ onto a model's parameter pytree.
 
 Models in ``repro.models`` store every adaptable linear as a 2-D weight
 ``(d_in, d_out)`` or, for scan-over-layers stacks, ``(L, d_in, d_out)``.
-Adapters mirror the parameter tree: ``peft_params`` is a nested dict with
-the same key paths holding adapter pytrees (stacked along the layer axis
-for scanned stacks, so ``jax.lax.scan`` slices them in lockstep with the
-weights).
+Every adapter implements the uniform :class:`repro.core.adapters.Adapter`
+protocol (``apply(x, w) / delta(x) / merge(w) / neutral(w) / num_params``),
+so this module contains **no per-method dispatch** — the concrete class is
+the dispatch.
+
+:func:`attach` returns a structured :class:`AdapterSet`: a pytree whose
+``tree`` mirrors the parameter key paths (adapters stacked along the layer
+axis for scanned stacks, so ``jax.lax.scan`` slices them in lockstep with
+the weights) plus static per-path metadata — path, method, and
+stacked-vs-flat layout — that downstream consumers (``merge_all``, the
+serving :class:`repro.core.bank.AdapterBank`, sharding rules) read instead
+of re-deriving it from array shapes.  ``AdapterSet`` is a drop-in
+trainable pytree: ``jax.grad``, optimizers, and checkpointing treat it as
+its nested adapter dict with metadata riding along statically.
 
 The public API:
 
-* :func:`attach` — create adapters for every target path; for QuanTA this
-  also folds the frozen initialization copy into the base weights (Eq. 9),
-  returning ``(folded_base_params, peft_params)``.
+* :func:`attach` — create an :class:`AdapterSet` for every target path;
+  for QuanTA this also folds the frozen initialization copy into the base
+  weights (Eq. 9), returning ``(folded_base_params, adapter_set)``.
 * :func:`merge_all` — merge trained adapters into the base weights for
   deployment (no inference overhead, paper §6).
-* :func:`peft_linear` — the adapted linear used by all models.
-* :func:`count_params` / :func:`trainable_fraction` — paper-style "# Params (%)".
+* :func:`peft_linear` — the adapted linear used by all models; pure
+  protocol dispatch (``adapter.apply``), with ``backend="pallas"`` routing
+  QuanTA through the fused kernels (``cfg.peft_backend``).
+* :func:`adapter_subtree` — normalize ``None`` / legacy dict /
+  ``AdapterSet`` / ``AdapterBank`` (+ per-request ``adapter_ids``) into
+  the nested adapter tree a model's layer scan consumes.
+* :func:`count_params` / :func:`trainable_fraction` — paper-style
+  "# Params (%)".
 """
 
 from __future__ import annotations
@@ -24,7 +40,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +51,12 @@ from repro.core.factorize import factorize, parse_scheme
 
 __all__ = [
     "PeftConfig",
+    "AdapterLeafSpec",
+    "AdapterSet",
     "attach",
     "merge_all",
     "peft_linear",
+    "adapter_subtree",
     "get_adapter",
     "count_params",
     "trainable_fraction",
@@ -76,7 +95,8 @@ class PeftConfig:
 
 
 def flatten_paths(tree: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
-    """Flatten a nested dict into ``{"a/b/c": leaf}``."""
+    """Flatten a nested dict into ``{"a/b/c": leaf}`` (adapter objects are
+    leaves, sub-dicts are structure)."""
     out: Dict[str, Any] = {}
     for k, v in tree.items():
         path = f"{prefix}/{k}" if prefix else k
@@ -97,6 +117,71 @@ def _set_path(tree: Dict[str, Any], path: str, value: Any) -> None:
 
 def _match(path: str, patterns: Tuple[str, ...]) -> bool:
     return any(re.fullmatch(p, path) for p in patterns)
+
+
+# ---------------------------------------------------------------------------
+# AdapterSet: the structured result of attach()
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdapterLeafSpec:
+    """Static per-path record of what ``attach`` created."""
+
+    path: str           # parameter key path, e.g. "layers/attn/q_proj"
+    method: str         # quanta | lora | dora | krona
+    stacked: bool       # True: leading layer axis, sliced by lax.scan
+    d_in: int
+    d_out: int
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdapterSet:
+    """Adapters for one model, plus static layout metadata.
+
+    ``tree`` is the nested adapter dict mirroring the parameter paths (the
+    trainable pytree); ``specs`` records, per adapted path, the method and
+    the stacked-vs-flat layout.  Dict-style read access (``set["layers"]``)
+    is kept for callers that navigate the tree directly.
+    """
+
+    tree: Dict[str, Any]
+    specs: Tuple[AdapterLeafSpec, ...] = dataclasses.field(
+        default=(), metadata=dict(static=True)
+    )
+
+    # ---- tree navigation
+    def subtree(self, key: str, adapter_ids=None) -> Dict[str, Any]:
+        """The nested adapter dict under ``key`` (a model scan group, e.g.
+        ``"layers"``).  ``adapter_ids`` is accepted for signature
+        uniformity with ``AdapterBank.subtree`` and ignored — a single
+        adapter set serves every request."""
+        del adapter_ids
+        return self.tree.get(key, {})
+
+    def __getitem__(self, key: str):
+        return self.tree[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.tree
+
+    def flat(self) -> Dict[str, Any]:
+        """``{path: adapter}`` over every adapted path."""
+        return flatten_paths(self.tree)
+
+    @property
+    def paths(self) -> Tuple[str, ...]:
+        return tuple(s.path for s in self.specs)
+
+    def spec(self, path: str) -> AdapterLeafSpec:
+        for s in self.specs:
+            if s.path == path:
+                return s
+        raise KeyError(path)
+
+    @property
+    def num_params(self) -> int:
+        return count_params(self.tree)
 
 
 def choose_dims(
@@ -123,12 +208,34 @@ def choose_dims(
     return (p * base[0],) + base[1:], (q * base[0],) + base[1:]
 
 
+def _krona_dims(cfg: PeftConfig, d_in: int, d_out: int) -> Tuple[int, int]:
+    """Validated KronA factor dims.
+
+    The old silent fallback ``a_in = gcd(krona_a, d_in);
+    a_out = gcd(a_in, d_out)`` could collapse to 1 (e.g. ``krona_a=7``
+    against even dims), leaving a near-empty ``1 x 1 (x) d_in x d_out``
+    adapter that trains but learns almost nothing.  Degenerate picks now
+    raise instead of degrading.
+    """
+    a_in = math.gcd(cfg.krona_a, d_in)
+    a_out = math.gcd(a_in, d_out)
+    if a_in < 2 or a_out < 2:
+        raise ValueError(
+            f"krona_a={cfg.krona_a} is incompatible with a "
+            f"({d_in}, {d_out}) weight: the usable factor collapses to "
+            f"(a_in={a_in}, a_out={a_out}), a near-empty adapter. Pick a "
+            f"krona_a sharing a common divisor >= 2 with both dims "
+            f"(e.g. a divisor of gcd={math.gcd(d_in, d_out)})."
+        )
+    return a_in, a_out
+
+
 def _make_adapter(key, w: jnp.ndarray, cfg: PeftConfig):
     """Build one adapter (possibly layer-stacked) for weight ``w``."""
     stacked = w.ndim == 3
     d_in, d_out = (w.shape[1], w.shape[2]) if stacked else (w.shape[0], w.shape[1])
 
-    def make_one(k):
+    def make_one(k, w_layer):
         if cfg.method == "quanta":
             dims_in, dims_out = choose_dims(
                 d_in, d_out, cfg.n_axes, cfg.scheme
@@ -149,24 +256,25 @@ def _make_adapter(key, w: jnp.ndarray, cfg: PeftConfig):
                 k, d_in, d_out, rank=cfg.rank, alpha=cfg.alpha, dtype=cfg.dtype
             )
         if cfg.method == "dora":
-            w2 = w[0] if stacked else w  # init magnitude from layer 0 template
+            # per-layer magnitude init: each layer starts EXACTLY at the
+            # base model (the old layer-0 template broke the stacked
+            # attach->merge_all identity at init)
             return DoraAdapter.create(
-                k, w2.astype(cfg.dtype), rank=cfg.rank, alpha=cfg.alpha,
+                k, w_layer.astype(cfg.dtype), rank=cfg.rank, alpha=cfg.alpha,
                 dtype=cfg.dtype,
             )
         if cfg.method == "krona":
-            a_in = math.gcd(cfg.krona_a, d_in)
-            a_out = math.gcd(a_in, d_out)
+            a_in, a_out = _krona_dims(cfg, d_in, d_out)
             return KronaAdapter.create(
                 k, d_in, d_out, a_in=a_in, a_out=a_out, dtype=cfg.dtype
             )
         raise ValueError(f"unknown PEFT method {cfg.method!r}")
 
     if not stacked:
-        return make_one(key)
+        return make_one(key, w)
     n_layers = w.shape[0]
     keys = jax.random.split(key, n_layers)
-    return jax.vmap(make_one)(keys)
+    return jax.vmap(make_one)(keys, w)
 
 
 def _fold_quanta(w: jnp.ndarray, adapter) -> jnp.ndarray:
@@ -178,11 +286,13 @@ def _fold_quanta(w: jnp.ndarray, adapter) -> jnp.ndarray:
 
 def attach(
     key: jax.Array, params: Dict[str, Any], cfg: PeftConfig
-) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+) -> Tuple[Dict[str, Any], Any]:
     """Create adapters for every parameter path matching ``cfg.targets``.
 
-    Returns ``(base_params, peft_params)``.  For QuanTA, ``base_params`` has
-    the frozen initialization copy folded in (``W0' = W0 - S``, Eq. 8/9) so
+    Returns ``(base_params, adapter_set)`` with ``adapter_set`` an
+    :class:`AdapterSet` (``{}`` for the full-FT / no-PEFT methods, so the
+    trainable tree stays empty).  For QuanTA, ``base_params`` has the
+    frozen initialization copy folded in (``W0' = W0 - S``, Eq. 8/9) so
     the adapted model is exactly the base model at step 0.  For the other
     methods the adapters are zero-initialized by construction and the base
     weights are returned unchanged.
@@ -197,6 +307,7 @@ def attach(
             f"{sorted(flat)[:20]}..."
         )
     peft: Dict[str, Any] = {}
+    specs = []
     new_params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy tree
     keys = jax.random.split(key, len(targets))
     for k, (path, w) in zip(keys, sorted(targets.items())):
@@ -204,9 +315,30 @@ def attach(
             raise ValueError(f"target {path} has ndim={w.ndim}; expected 2 or 3")
         adapter = _make_adapter(k, w, cfg)
         _set_path(peft, path, adapter)
+        stacked = w.ndim == 3
+        d_in, d_out = w.shape[-2], w.shape[-1]
+        specs.append(AdapterLeafSpec(path, cfg.method, stacked, d_in, d_out))
         if cfg.method == "quanta":
             _set_path(new_params, path, _fold_quanta(w, adapter))
-    return new_params, peft
+    return new_params, AdapterSet(tree=peft, specs=tuple(specs))
+
+
+def adapter_subtree(peft, key: str, adapter_ids=None) -> Dict[str, Any]:
+    """The nested adapter tree a model scan group consumes.
+
+    Accepts ``None`` (no PEFT), a legacy bare nested dict, an
+    :class:`AdapterSet`, or an ``AdapterBank`` — anything exposing
+    ``.subtree(key, adapter_ids)``.  ``adapter_ids`` (a traced ``(B,)``
+    int32 array of per-request tenant ids, 0 = base model) only matters
+    for banks, where it selects each request's adapter inside the jitted
+    program.
+    """
+    if peft is None:
+        return {}
+    sub = getattr(peft, "subtree", None)
+    if sub is not None:
+        return sub(key, adapter_ids)
+    return peft.get(key, {})
 
 
 def get_adapter(peft: Optional[Dict[str, Any]], *keys: str):
@@ -224,48 +356,43 @@ def peft_linear(
     w: jnp.ndarray,
     adapter=None,
     bias: Optional[jnp.ndarray] = None,
+    backend: str = "reference",
 ) -> jnp.ndarray:
-    """The adapted linear layer used by every model in ``repro.models``."""
+    """The adapted linear layer used by every model in ``repro.models``.
+
+    Pure protocol dispatch: the adapter's ``apply`` defines its own
+    application (delta form, DoRA's weight rescaling, the bank's gathered
+    per-request form, ...).  ``backend`` is the model's
+    ``cfg.peft_backend``; adapters without a fused kernel ignore it.
+    """
     if adapter is None:
         y = x @ w
-    elif isinstance(adapter, DoraAdapter):
-        y = adapter.forward(x, w)
     else:
-        y = x @ w + adapter.delta(x)
+        y = adapter.apply(x, w, backend)
     if bias is not None:
         y = y + bias
     return y
 
 
 def _merge_one(w: jnp.ndarray, adapter) -> jnp.ndarray:
-    if isinstance(adapter, Q.QuantaAdapter):
-        fn = Q.merge
-    else:
-        fn = lambda w0, a: a.merge(w0)  # noqa: E731
+    fn = lambda w0, a: a.merge(w0)  # noqa: E731 — protocol, not dispatch
     if w.ndim == 3:
         return jax.vmap(fn)(w, adapter)
     return fn(w, adapter)
 
 
-def merge_all(params: Dict[str, Any], peft: Dict[str, Any]) -> Dict[str, Any]:
-    """Merge every adapter into the base weights (deployment form)."""
-    flat_adapters = _flatten_adapters(peft)
+def merge_all(params: Dict[str, Any], peft) -> Dict[str, Any]:
+    """Merge every adapter into the base weights (deployment form, §6:
+    the zero-inference-overhead single-tenant fast path).
+
+    ``peft`` may be an :class:`AdapterSet` or a legacy nested dict.
+    """
+    flat_adapters = flatten_paths(getattr(peft, "tree", peft) or {})
+    flat_params = flatten_paths(params)
     merged = jax.tree_util.tree_map(lambda x: x, params)
     for path, adapter in flat_adapters.items():
-        flat = flatten_paths(params)
-        _set_path(merged, path, _merge_one(flat[path], adapter))
+        _set_path(merged, path, _merge_one(flat_params[path], adapter))
     return merged
-
-
-def _flatten_adapters(peft: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
-    out: Dict[str, Any] = {}
-    for k, v in peft.items():
-        path = f"{prefix}/{k}" if prefix else k
-        if isinstance(v, dict):
-            out.update(_flatten_adapters(v, path))
-        else:
-            out[path] = v
-    return out
 
 
 def count_params(tree: Any) -> int:

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adapters import Adapter
 from repro.core.factorize import factorize, pair_schedule, param_count
 
 __all__ = [
@@ -298,12 +299,16 @@ def materialize_einsum(
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class QuantaAdapter:
+class QuantaAdapter(Adapter):
     """Trainable QuanTA state for one linear layer.
 
     After :func:`fold_frozen_copy` the adapted layer is (Eq. 9)::
 
         y = x @ w0_folded + adapter.delta(x)
+
+    Implements the :class:`repro.core.adapters.Adapter` protocol;
+    ``apply`` additionally routes through the fused Pallas kernels
+    (``repro.kernels.ops``) when called with ``backend="pallas"``.
     """
 
     tensors: Tuple[jnp.ndarray, ...]
@@ -376,6 +381,29 @@ class QuantaAdapter:
     def matrix(self) -> jnp.ndarray:
         """Full ``(d_in, d_out)`` operator matrix."""
         return materialize(self.tensors, self.dims_in, self.pairs, self.dims_out)
+
+    def apply(self, x: jnp.ndarray, w: jnp.ndarray,
+              backend: str = "reference") -> jnp.ndarray:
+        """Adapted linear ``x @ w + delta(x)``.
+
+        ``backend="pallas"`` fuses base matmul and chain in one kernel
+        (``kernels.ops.quanta_linear_fused``) when the working set fits
+        the VMEM budget, else XLA matmul + the fused-chain kernel —
+        interpret-mode on CPU, Mosaic on TPU (``kernels.dispatch``).
+        Forward-only today: training keeps ``backend="reference"`` (the
+        raw kernels carry no custom VJP).
+        """
+        if backend == "pallas" and w.ndim == 2:
+            # deferred import: kernels.ops imports QuantaAdapter from here
+            from repro.kernels.ops import quanta_linear_fused
+
+            return quanta_linear_fused(x, w, self)
+        return x @ w + self.delta(x)
+
+    def merge(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Merge the trained operator into the (folded) base weight
+        (paper §6, no inference overhead): ``W = W0' + T_theta``."""
+        return merge(w, self)
 
 
 def fold_frozen_copy(w0: jnp.ndarray, adapter: QuantaAdapter) -> jnp.ndarray:

@@ -49,6 +49,7 @@ __all__ = [
     "param_shardings",
     "batch_shardings",
     "cache_shardings",
+    "peft_shardings",
     "replicated",
     "state_shardings",
 ]
@@ -124,6 +125,41 @@ def _apply_trailing(
         if shape[dim] % axis_sizes.get(ax, 1) == 0:
             spec[dim] = ax
     return _ns(mesh, P(*spec))
+
+
+def peft_shardings(mesh: Mesh, peft: Any, bank_dp: bool = False) -> Any:
+    """Placement for adapter state: a single ``AdapterSet`` (or legacy
+    dict), or a multi-tenant ``core.bank.AdapterBank``.
+
+    Adapter leaves keep the existing PEFT rule — REPLICATED (PEFT state is
+    tiny by construction, paper §6, and the decode TP rules never shard
+    it).  For a bank the default also replicates the bank axis: per-slot
+    ``adapter_ids`` are arbitrary, so every device may need any tenant's
+    rows and a local gather is the latency-optimal layout.
+
+    ``bank_dp=True`` trades that for memory at high tenant counts: bank-
+    stacked group leaves shard their BANK axis over the DP axes when the
+    extent divides (GSPMD inserts the gather collectives at apply time);
+    leaves without a divisible bank axis — and the ``id_maps`` — keep the
+    replicated rule.  Requires an ``AdapterBank`` (ignored otherwise).
+    """
+    axes = getattr(peft, "bank_axis_tree", None)
+    if not bank_dp or axes is None:
+        return replicated(mesh, peft)
+    dp = dp_axes(mesh)
+    dp_size = math.prod(dict(mesh.shape)[a] for a in dp) if dp else 1
+
+    def assign(leaf, ax):
+        if (
+            dp_size > 1 and ax >= 0 and hasattr(leaf, "ndim")
+            and leaf.ndim > ax and leaf.shape[ax] % dp_size == 0
+        ):
+            spec: list = [None] * leaf.ndim
+            spec[ax] = dp
+            return _ns(mesh, P(*spec))
+        return _ns(mesh, P())
+
+    return jax.tree_util.tree_map(assign, peft, axes())
 
 
 def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree: Any,

@@ -2,7 +2,12 @@
 
 ``build_model(cfg)`` returns one of the model classes, all exposing:
 ``init``, ``forward``, ``loss``, ``init_cache``, ``prefill``, ``decode_step``,
-``cache_spec``, ``insert_cache``.
+``cache_spec``, ``insert_cache``.  The ``peft`` argument of the
+forward/serving entry points accepts anything ``core.peft.adapter_subtree``
+normalizes — ``None``, a legacy nested dict, an ``AdapterSet``, or a
+multi-tenant ``core.bank.AdapterBank`` (the serving entry points
+``prefill`` / ``decode_step`` / ``prefill_chunk`` additionally take the
+bank's per-request ``adapter_ids``).
 
 ``cache_slot_spec(cfg)`` returns the declarative slot layout of the decode
 cache (a ``CacheLeafSpec`` per leaf, mirroring ``init_cache``): which axis

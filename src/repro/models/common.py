@@ -87,6 +87,15 @@ class ModelConfig:
     # (kernels/flash_attention.py; interpret on CPU, Mosaic on TPU).
     # Threaded through train/prefill/decode by every attention family.
     attn_backend: str = "reference"
+    # PEFT application backend: "reference" = pure-JAX adapter protocol
+    # (delta/apply), "pallas" = QuanTA adapted linears route through the
+    # fused chain kernels (kernels/ops.quanta_linear_fused: one kernel for
+    # base matmul + chain when the tile fits VMEM per fused_vmem_ok, else
+    # XLA matmul + fused chain; interpret on CPU, Mosaic on TPU).
+    # Forward/serving only — the raw QuanTA kernels carry no custom VJP,
+    # so training keeps "reference".  Non-QuanTA adapters and banked
+    # (multi-tenant) application ignore the switch.
+    peft_backend: str = "reference"
     # attention blocking: q_block tiles the query axis (both backends);
     # kv_block is the flash kernel's KV tile (and the granularity at
     # which fully-masked blocks are skipped)

@@ -24,7 +24,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.peft import get_adapter, peft_linear
+from repro.core.peft import adapter_subtree, get_adapter, peft_linear
 from repro.kernels.dispatch import masked_softmax
 from repro.models.attention import MASK_VALUE, blockwise_causal_attention
 from repro.models.common import (
@@ -67,6 +67,11 @@ class Griffin:
         self.d_rnn = cfg.lru_width or cfg.d_model
         self.n_macro = cfg.n_layers // cfg.attn_period
         self.n_tail = cfg.n_layers - self.n_macro * cfg.attn_period  # rec tail
+
+    def _linear(self, x, w, adapter=None, bias=None):
+        """Adapted linear with this model's ``cfg.peft_backend`` routed
+        into the adapter protocol (``peft_linear``)."""
+        return peft_linear(x, w, adapter, bias, backend=self.cfg.peft_backend)
 
     # ------------------------------------------------------------------ init
     def _rec_params(self, key, dt):
@@ -151,9 +156,9 @@ class Griffin:
     def _mlp(self, lp, la, x):
         cfg = self.cfg
         h = rms_norm(x, lp["ln"], cfg.norm_eps)
-        g = peft_linear(h, lp["gate_proj"], get_adapter(la, "gate_proj"))
-        u = peft_linear(h, lp["up_proj"], get_adapter(la, "up_proj"))
-        return x + peft_linear(
+        g = self._linear(h, lp["gate_proj"], get_adapter(la, "gate_proj"))
+        u = self._linear(h, lp["up_proj"], get_adapter(la, "up_proj"))
+        return x + self._linear(
             jax.nn.gelu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
         )
 
@@ -166,9 +171,9 @@ class Griffin:
         b, s, _ = x.shape
         xn = rms_norm(x, lp["ln"], cfg.norm_eps)
         gate = jax.nn.gelu(
-            peft_linear(xn, lp["gate_proj"], get_adapter(la, "gate_proj"))
+            self._linear(xn, lp["gate_proj"], get_adapter(la, "gate_proj"))
         )
-        u = peft_linear(xn, lp["rec_proj"], get_adapter(la, "rec_proj"))
+        u = self._linear(xn, lp["rec_proj"], get_adapter(la, "rec_proj"))
 
         k = cfg.conv_kernel
         if state is None:
@@ -222,16 +227,16 @@ class Griffin:
             h = h[:, None, :]
 
         y = (h.astype(x.dtype)) * gate
-        out = peft_linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
+        out = self._linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
         return x + out, new_state
 
     def _attn_block(self, lp, la, x, rope, cache=None, prefill_lengths=None):
         cfg = self.cfg
         b, s, _ = x.shape
         xn = rms_norm(x, lp["ln"], cfg.norm_eps)
-        q = peft_linear(xn, lp["q_proj"], get_adapter(la, "q_proj"))
-        kk = peft_linear(xn, lp["k_proj"], get_adapter(la, "k_proj"))
-        v = peft_linear(xn, lp["v_proj"], get_adapter(la, "v_proj"))
+        q = self._linear(xn, lp["q_proj"], get_adapter(la, "q_proj"))
+        kk = self._linear(xn, lp["k_proj"], get_adapter(la, "k_proj"))
+        v = self._linear(xn, lp["v_proj"], get_adapter(la, "v_proj"))
         q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
         kk = kk.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
         v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
@@ -318,7 +323,7 @@ class Griffin:
                 b, 1, cfg.n_heads, cfg.head_dim
             )
         out = out.reshape(b, s, cfg.attn_dim)
-        out = peft_linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
+        out = self._linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
         return x + out, new_cache
 
     # --------------------------------------------------------------- forward
@@ -385,7 +390,7 @@ class Griffin:
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
         b, s, _ = x.shape
         rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
-        block_adapters = (peft or {}).get("blocks", {})
+        block_adapters = adapter_subtree(peft, "blocks")
 
         def body(x, xs):
             bp, ba = xs
@@ -395,7 +400,7 @@ class Griffin:
         body_fn = jax.checkpoint(body) if cfg.remat else body
         x, _ = jax.lax.scan(body_fn, x, (params["blocks"], block_adapters))
 
-        tail_adapters = (peft or {}).get("tail", {})
+        tail_adapters = adapter_subtree(peft, "tail")
         for i in range(self.n_tail):
             tp = params["tail"]
             x, _ = self._rec_block(
@@ -480,7 +485,8 @@ class Griffin:
             block_tables,
         )
 
-    def prefill(self, params, peft, batch, lengths=None):
+    def prefill(self, params, peft, batch, lengths=None,
+                adapter_ids=None):
         """Batched prefill: one full-sequence pass that returns each row's
         last-real-position logits plus a decode-ready cache (final LRU and
         conv states, windowed-attention ring buffers).  ``lengths`` (B,)
@@ -495,7 +501,7 @@ class Griffin:
         dt = cfg.param_dtype
         x = params["embed"]["tokens"][toks].astype(cfg.compute_dtype)
         rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
-        block_adapters = (peft or {}).get("blocks", {})
+        block_adapters = adapter_subtree(peft, "blocks", adapter_ids)
 
         def body(x, xs):
             bp, ba = xs
@@ -515,7 +521,7 @@ class Griffin:
             "pos": pos_r,
             "len": lens,
         }
-        tail_adapters = (peft or {}).get("tail", {})
+        tail_adapters = adapter_subtree(peft, "tail", adapter_ids)
         for i in range(self.n_tail):
             tp = params["tail"]
             x, (lru_t, conv_t) = self._rec_block(
@@ -533,14 +539,14 @@ class Griffin:
         return logits, cache
 
     def decode_step(self, params, peft, cache, batch, block_tables=None,
-                    mesh=None):
+                    mesh=None, adapter_ids=None):
         """One decode step.  ``mesh`` is accepted for API uniformity with
         the transformer family and ignored: the paged ring path is a
         pure-JAX gather that GSPMD partitions directly (no opaque kernel
         needing a ``shard_map`` wrapper)."""
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
-        block_adapters = (peft or {}).get("blocks", {})
+        block_adapters = adapter_subtree(peft, "blocks", adapter_ids)
         new_len = cache["len"] + 1
         rope = make_rope(
             (new_len - 1)[:, None], cfg.head_dim, cfg.rope_theta
@@ -566,7 +572,7 @@ class Griffin:
             lru1=lru1, conv1=conv1, lru2=lru2, conv2=conv2,
             k=k_r, v=v_r, pos=pos_r, len=new_len,
         )
-        tail_adapters = (peft or {}).get("tail", {})
+        tail_adapters = adapter_subtree(peft, "tail", adapter_ids)
         for i in range(self.n_tail):
             tp = params["tail"]
             x, (lru_t, conv_t) = self._rec_block(

@@ -27,7 +27,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.peft import get_adapter, peft_linear
+from repro.core.peft import adapter_subtree, get_adapter, peft_linear
 from repro.models.common import (
     CacheLeafSpec,
     ModelConfig,
@@ -63,6 +63,11 @@ class Mamba2:
         self.n_ssm_heads = self.d_inner // cfg.ssm_head_dim
         self.n_groups = 1
         self.conv_dim = self.d_inner + 2 * self.n_groups * cfg.ssm_state
+
+    def _linear(self, x, w, adapter=None, bias=None):
+        """Adapted linear with this model's ``cfg.peft_backend`` routed
+        into the adapter protocol (``peft_linear``)."""
+        return peft_linear(x, w, adapter, bias, backend=self.cfg.peft_backend)
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> Dict[str, Any]:
@@ -111,8 +116,8 @@ class Mamba2:
 
     # ------------------------------------------------------------ projections
     def _project(self, lp, la, xn):
-        z = peft_linear(xn, lp["z_proj"], get_adapter(la, "z_proj"))
-        xs = peft_linear(xn, lp["x_proj"], get_adapter(la, "x_proj"))
+        z = self._linear(xn, lp["z_proj"], get_adapter(la, "z_proj"))
+        xs = self._linear(xn, lp["x_proj"], get_adapter(la, "x_proj"))
         bc = xn @ lp["bc_proj"]
         dt_raw = xn @ lp["dt_proj"] + lp["dt_bias"]
         return z, xs, bc, dt_raw
@@ -264,14 +269,14 @@ class Mamba2:
         y = y + xs2 * lp["d_skip"].astype(y.dtype)[None, None, :, None]
         y = y.reshape(bsz, -1, self.d_inner)
         y = rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
-        out = peft_linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
+        out = self._linear(y, lp["out_proj"], get_adapter(la, "out_proj"))
         return x + out, new_cache
 
     # --------------------------------------------------------------- forward
     def forward(self, params, batch, peft=None, *, last_only: bool = False):
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers")
 
         def body(x, xs):
             lp, la = xs
@@ -297,7 +302,7 @@ class Mamba2:
     def _hidden(self, params, batch, peft=None):
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers")
 
         def body(x, xs):
             lp, la = xs
@@ -343,7 +348,8 @@ class Mamba2:
             self.cache_spec(), cache, slot_ids, prefill_cache, lengths
         )
 
-    def prefill(self, params, peft, batch, lengths=None):
+    def prefill(self, params, peft, batch, lengths=None,
+                adapter_ids=None):
         """Batched prefill via the chunked dual form: returns the logits of
         each row's last real position plus a decode-ready cache holding the
         final SSM state and conv window (``lengths`` (B,) for right-padded
@@ -356,7 +362,7 @@ class Mamba2:
             else jnp.asarray(lengths, jnp.int32)
         )
         x = params["embed"]["tokens"][toks].astype(cfg.compute_dtype)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers", adapter_ids)
 
         def body(x, xs):
             lp, la = xs
@@ -377,11 +383,11 @@ class Mamba2:
         return logits, cache
 
     def decode_step(self, params, peft, cache, batch, block_tables=None,
-                    mesh=None):
+                    mesh=None, adapter_ids=None):
         del block_tables, mesh           # no per-token leaves: always dense
         cfg = self.cfg
         x = params["embed"]["tokens"][batch["tokens"]].astype(cfg.compute_dtype)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers", adapter_ids)
         new_len = cache["len"] + 1
 
         def body(x, xs):

@@ -16,7 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.peft import get_adapter, peft_linear
+from repro.core.peft import adapter_subtree, get_adapter, peft_linear
 from repro.models.attention import (
     blockwise_causal_attention,
     chunk_attention,
@@ -52,6 +52,11 @@ class Transformer:
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+
+    def _linear(self, x, w, adapter=None, bias=None):
+        """Adapted linear with this model's ``cfg.peft_backend`` routed
+        into the adapter protocol (``peft_linear``)."""
+        return peft_linear(x, w, adapter, bias, backend=self.cfg.peft_backend)
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> Dict[str, Any]:
@@ -159,11 +164,11 @@ class Transformer:
         block indices.  Returns ``(out, new_kv)``."""
         cfg = self.cfg
         b, s, d = x.shape
-        q = peft_linear(x, lp["q_proj"], get_adapter(la, "q_proj"),
+        q = self._linear(x, lp["q_proj"], get_adapter(la, "q_proj"),
                         lp.get("q_bias"))
-        k = peft_linear(x, lp["k_proj"], get_adapter(la, "k_proj"),
+        k = self._linear(x, lp["k_proj"], get_adapter(la, "k_proj"),
                         lp.get("k_bias"))
-        v = peft_linear(x, lp["v_proj"], get_adapter(la, "v_proj"),
+        v = self._linear(x, lp["v_proj"], get_adapter(la, "v_proj"),
                         lp.get("v_bias"))
         q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
         k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
@@ -225,13 +230,13 @@ class Transformer:
             )
             new_kv = (k_cache, v_cache)
         out = out.reshape(b, s, cfg.attn_dim)
-        out = peft_linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
+        out = self._linear(out, lp["o_proj"], get_adapter(la, "o_proj"))
         return out, new_kv
 
     def _mlp(self, lp, la, x):
-        g = peft_linear(x, lp["gate_proj"], get_adapter(la, "gate_proj"))
-        u = peft_linear(x, lp["up_proj"], get_adapter(la, "up_proj"))
-        return peft_linear(
+        g = self._linear(x, lp["gate_proj"], get_adapter(la, "gate_proj"))
+        u = self._linear(x, lp["up_proj"], get_adapter(la, "up_proj"))
+        return self._linear(
             jax.nn.silu(g) * u, lp["down_proj"], get_adapter(la, "down_proj")
         )
 
@@ -279,7 +284,7 @@ class Transformer:
         b, s, _ = x.shape
         positions = jnp.arange(s)[None, :]
         rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers")
 
         def body(carry, xs):
             x, aux = carry
@@ -312,7 +317,7 @@ class Transformer:
         x = self._embed(params, batch)
         positions = jnp.arange(x.shape[1])[None, :]
         rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers")
 
         def body(carry, xs):
             x, aux = carry
@@ -387,12 +392,15 @@ class Transformer:
             block_tables,
         )
 
-    def prefill(self, params, peft, batch, lengths=None):
+    def prefill(self, params, peft, batch, lengths=None,
+                adapter_ids=None):
         """Batched prefill: fills the KV cache, returns the logits of each
         row's last *real* position.
 
         ``lengths`` (B,) gives per-row prompt lengths for right-padded
-        batches; ``None`` means every row uses the full sequence.  Causality
+        batches; ``None`` means every row uses the full sequence.
+        ``adapter_ids`` (B,) selects each row's tenant when ``peft`` is an
+        ``AdapterBank`` (0 = base model; see ``core.bank``).  Causality
         makes right padding exact for attention: positions ``< lengths[i]``
         never attend to pad tokens, so the KV prefix and the gathered logits
         are identical to an unpadded run.
@@ -401,7 +409,7 @@ class Transformer:
         x = self._embed(params, batch)
         b, s, _ = x.shape
         rope = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers", adapter_ids)
         # Serving waves (lengths given) must not capacity-drop MoE tokens;
         # the dry-run's bulk prefill lowering keeps the training dispatch.
         no_drop = lengths is not None
@@ -426,7 +434,7 @@ class Transformer:
         return logits, cache
 
     def decode_step(self, params, peft, cache, batch, block_tables=None,
-                    mesh=None):
+                    mesh=None, adapter_ids=None):
         """One decode step.  ``batch`` holds the single new token (or frame
         embedding); cache slots at ``len`` are written then attended.
 
@@ -450,7 +458,7 @@ class Transformer:
         new_len = cache["len"] + 1
         positions = (new_len - 1)[:, None]                      # (B, 1)
         rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers", adapter_ids)
 
         def body(x, xs):
             lp, la, k_l, v_l = xs
@@ -471,7 +479,8 @@ class Transformer:
         new_cache = {"k": k_new, "v": v_new, "len": new_len}
         return _mask_vocab_pad(logits, cfg.vocab_size), new_cache
 
-    def prefill_chunk(self, params, peft, batch, cache, pos, n_valid):
+    def prefill_chunk(self, params, peft, batch, cache, pos, n_valid,
+                      adapter_ids=None):
         """One fixed-size chunk of an incremental (chunked) prefill.
 
         ``batch["tokens"]`` (B, C) is the chunk, right-padded on the final
@@ -497,7 +506,7 @@ class Transformer:
         x = params["embed"]["tokens"][toks].astype(cfg.compute_dtype)
         q_pos = pos + jnp.arange(c, dtype=jnp.int32)
         rope = make_rope(q_pos[None, :], cfg.head_dim, cfg.rope_theta)
-        layer_adapters = (peft or {}).get("layers", {})
+        layer_adapters = adapter_subtree(peft, "layers", adapter_ids)
 
         def body(x, xs):
             lp, la, k_l, v_l = xs

@@ -1,5 +1,6 @@
 """Serving runtime: batched continuous-batching engine (dense or paged
-KV cache, single-device or mesh-sharded) over merged or adapter-attached
+KV cache, single-device or mesh-sharded) over merged, adapter-attached,
+or multi-tenant (``AdapterBank`` + per-request adapter selection)
 models."""
 
 from repro.serve.engine import Request, ServingEngine

@@ -88,9 +88,27 @@ Sharded and single-device engines produce token-for-token identical
 greedy outputs (pinned by ``tests/test_sharded_serve.py`` on 8 virtual
 CPU devices, for dense AND paged caches across all three families).
 
-Serving uses MERGED weights by default (paper §6: zero inference
-overhead); passing ``peft`` serves the adapter-attached model instead —
-numerically identical (tested).
+Adapters (single-tenant vs multi-tenant):
+
+* **merged weights** (default, paper §6): run ``core.peft.merge_all`` and
+  serve the folded params — zero inference overhead.  This remains the
+  single-tenant deployment fast path.
+* **single adapter set** (``peft=``): serve the adapter-attached model
+  (an ``AdapterSet`` from ``core.peft.attach``, or a legacy nested dict)
+  — numerically identical to merged (tested).  ``cfg.peft_backend =
+  "pallas"`` routes QuanTA application through the fused kernels.
+* **multi-tenant bank** (``adapters=``, a ``core.bank.AdapterBank``): N
+  trained adapter sets over ONE base-params tree.  ``submit(req,
+  adapter="sst2")`` names the tenant; the engine tracks a per-slot
+  ``adapter_id`` (0 = base model) and threads it as a traced ``(B,)``
+  argument of the prefill-wave, chunked-prefill, and fused-decode jits,
+  where each adapted linear gathers its row's adapter with ``jnp.take``
+  along the bank axis — a batch mixing tenants stays ONE program with
+  O(1) dispatch, and outputs are token-for-token identical to running
+  each tenant on its own single-tenant engine (tested, dense + paged +
+  sharded).  Under a mesh the bank is placed by
+  ``launch.shardings.peft_shardings`` (replicated by default; the bank
+  axis can be DP-split).
 """
 
 from __future__ import annotations
@@ -117,6 +135,9 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    # multi-tenant serving: which bank adapter to decode with (None = the
+    # base model; only valid on engines built with ``adapters=``)
+    adapter: Optional[str] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -129,6 +150,7 @@ class ServingEngine:
         params,
         peft=None,
         *,
+        adapters=None,
         n_slots: int = 4,
         max_len: int = 256,
         admission: str = "auto",
@@ -151,6 +173,18 @@ class ServingEngine:
         self.cache_mode = cache
         self.mesh = mesh
         self.spec = model.cache_spec()
+        if adapters is not None and peft is not None:
+            raise ValueError(
+                "pass either peft= (one adapter set for every request) or "
+                "adapters= (an AdapterBank with per-request selection)"
+            )
+        self.bank = adapters
+        # what the model jits close over: the bank (selected per request
+        # by adapter_ids) or the engine-wide single adapter set
+        served = adapters if adapters is not None else peft
+        # per-slot tenant ids (0 = base model), threaded into every
+        # serving jit when a bank is attached
+        self._adapter_ids = np.zeros((n_slots,), np.int32)
 
         # --- mesh-aware layout: DP arena count for the paged allocator
         # (slot axis must divide over the DP axes, else slots replicate
@@ -176,7 +210,7 @@ class ServingEngine:
         # --- explicit shardings for every jitted entry point
         if mesh is not None:
             from repro.launch.shardings import (
-                cache_shardings, param_shardings, replicated,
+                cache_shardings, param_shardings, peft_shardings, replicated,
             )
 
             struct = (
@@ -213,13 +247,17 @@ class ServingEngine:
             params = jax.device_put(
                 params, param_shardings(self.cfg, mesh, params, decode=True)
             )
-            if peft is not None:
-                peft = jax.device_put(peft, replicated(mesh, peft))
+            if served is not None:
+                served = jax.device_put(
+                    served, peft_shardings(mesh, served)
+                )
+                if adapters is not None:
+                    self.bank = served
         else:
             self._cache_sh = self._wave_sh = self._chunk_sh = None
             self._repl = None
         self.params = params
-        self.peft = peft
+        self.peft = served if adapters is None else None
         self.cache = (
             self.pager.init_cache(shardings=self._cache_sh)
             if self.pager is not None
@@ -232,6 +270,15 @@ class ServingEngine:
         self.stats: Dict[str, Any] = {
             "decode_calls": 0, "prefill_calls": 0, "chunk_calls": 0,
             "preemptions": 0,
+            # per-host adapter-state bytes: one AdapterSet, or the whole
+            # bank (N tenants + neutral rows + any QuanTA rebase weights)
+            "adapter_bytes": int(sum(
+                addressable_nbytes(l)
+                for l in jax.tree_util.tree_leaves(served)
+            )) if served is not None else 0,
+            "adapter_tenants": (
+                self.bank.num_tenants if self.bank is not None else 0
+            ),
         }
 
         can_prefill = (
@@ -280,45 +327,74 @@ class ServingEngine:
             self._cache_sh, self._wave_sh, self._chunk_sh
         )
         repl = self._repl
+        banked = self.bank is not None
+        # every serving jit gains one trailing traced (B,) adapter_ids
+        # argument when a bank is attached — per-request selection stays
+        # inside the single fused program (O(1) dispatch either way)
         if self._paged:
-            self._decode = _jit(
-                lambda cache, toks, bt: model.decode_step(
-                    params, peft, cache, {"tokens": toks}, block_tables=bt,
-                    mesh=decode_mesh,
+            if banked:
+                fn = lambda cache, toks, bt, aids: model.decode_step(  # noqa: E731
+                    params, served, cache, {"tokens": toks},
+                    block_tables=bt, mesh=decode_mesh, adapter_ids=aids,
+                )
+                in_sh = (cache_sh, repl, repl, repl)
+            else:
+                fn = lambda cache, toks, bt: model.decode_step(  # noqa: E731
+                    params, served, cache, {"tokens": toks},
+                    block_tables=bt, mesh=decode_mesh,
+                )
+                in_sh = (cache_sh, repl, repl)
+        else:
+            if banked:
+                fn = lambda cache, toks, aids: model.decode_step(  # noqa: E731
+                    params, served, cache, {"tokens": toks},
+                    adapter_ids=aids,
+                )
+                in_sh = (cache_sh, repl, repl)
+            else:
+                fn = lambda cache, toks: model.decode_step(  # noqa: E731
+                    params, served, cache, {"tokens": toks}
+                )
+                in_sh = (cache_sh, repl)
+        self._decode = _jit(fn, in_sh=in_sh, out_sh=(repl, cache_sh))
+        if admission != "prefill":
+            self._prefill = None
+        elif banked:
+            self._prefill = _jit(
+                lambda toks, lens, aids: model.prefill(
+                    params, served, {"tokens": toks}, lengths=lens,
+                    adapter_ids=aids,
                 ),
-                in_sh=(cache_sh, repl, repl),
-                out_sh=(repl, cache_sh),
+                in_sh=(repl, repl, repl),
+                out_sh=(repl, wave_sh),
             )
         else:
-            self._decode = _jit(
-                lambda cache, toks: model.decode_step(
-                    params, peft, cache, {"tokens": toks}
-                ),
-                in_sh=(cache_sh, repl),
-                out_sh=(repl, cache_sh),
-            )
-        self._prefill = (
-            _jit(
+            self._prefill = _jit(
                 lambda toks, lens: model.prefill(
-                    params, peft, {"tokens": toks}, lengths=lens
+                    params, served, {"tokens": toks}, lengths=lens
                 ),
                 in_sh=(repl, repl),
                 out_sh=(repl, wave_sh),
             )
-            if admission == "prefill"
-            else None
-        )
-        self._chunk_fn = (
-            _jit(
+        if not self._can_chunk:
+            self._chunk_fn = None
+        elif banked:
+            self._chunk_fn = _jit(
+                lambda staged, toks, pos, n_valid, aids: model.prefill_chunk(
+                    params, served, {"tokens": toks}, staged, pos, n_valid,
+                    adapter_ids=aids,
+                ),
+                in_sh=(chunk_sh, repl, repl, repl, repl),
+                out_sh=(repl, chunk_sh),
+            )
+        else:
+            self._chunk_fn = _jit(
                 lambda staged, toks, pos, n_valid: model.prefill_chunk(
-                    params, peft, {"tokens": toks}, staged, pos, n_valid
+                    params, served, {"tokens": toks}, staged, pos, n_valid
                 ),
                 in_sh=(chunk_sh, repl, repl, repl),
                 out_sh=(repl, chunk_sh),
             )
-            if self._can_chunk
-            else None
-        )
         # the insert scatter runs eagerly on one device (current behavior)
         # but becomes a jitted call with explicit shardings under a mesh —
         # the wave lands in the partitioned cache without a host gather.
@@ -341,7 +417,18 @@ class ServingEngine:
         self._update_gauges()
 
     # ------------------------------------------------------------- frontend
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, adapter: Optional[str] = None) -> None:
+        """Queue a request.  ``adapter`` (or ``req.adapter``) names the bank
+        tenant to decode with — engines built with ``adapters=`` only;
+        ``None`` serves the base model (bank id 0)."""
+        name = adapter if adapter is not None else req.adapter
+        if name is not None and self.bank is None:
+            raise ValueError(
+                f"request {req.uid} names adapter {name!r} but the "
+                "engine has no AdapterBank (pass adapters= at construction)"
+            )
+        if self.bank is not None:
+            self.bank.id_of(name)            # unknown tenants fail at submit
         if len(req.prompt) >= self.max_len:
             raise ValueError("prompt longer than engine max_len")
         if self._paged:
@@ -357,7 +444,22 @@ class ServingEngine:
                     f"request needs up to {need} blocks but a pool arena "
                     f"only has {usable}; it could never be admitted"
                 )
+        if adapter is not None:
+            req.adapter = adapter    # stamp only once fully validated
         self.queue.append(req)
+
+    def _req_adapter_id(self, req: Request) -> int:
+        return self.bank.id_of(req.adapter) if self.bank is not None else 0
+
+    def _decode_args(self, toks) -> List[Any]:
+        """Positional args of the fused decode jit for this engine shape
+        (cache, tokens [, block_tables] [, adapter_ids])."""
+        args: List[Any] = [self.cache, toks]
+        if self._paged:
+            args.append(self.pager.device_tables())
+        if self.bank is not None:
+            args.append(jnp.asarray(self._adapter_ids))
+        return args
 
     @staticmethod
     def _tokens(req: Request) -> List[int]:
@@ -456,12 +558,20 @@ class ServingEngine:
         # fixed (n_slots, bucketed_s) shape: bounded compile count
         toks = np.zeros((self.n_slots, s), np.int32)
         lens = np.ones((self.n_slots,), np.int32)   # dummy rows: length 1
+        wave_ids = np.zeros((self.n_slots,), np.int32)   # dummy rows: base
         for row, p in enumerate(streams):
             toks[row, : len(p)] = p
             lens[row] = len(p)
-        logits, wave_cache = self._prefill(
-            jnp.asarray(toks), jnp.asarray(lens)
-        )
+        for row, req in enumerate(wave):
+            wave_ids[row] = self._req_adapter_id(req)
+        if self.bank is not None:
+            logits, wave_cache = self._prefill(
+                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(wave_ids)
+            )
+        else:
+            logits, wave_cache = self._prefill(
+                jnp.asarray(toks), jnp.asarray(lens)
+            )
         self.stats["prefill_calls"] += 1
         slot_ids = np.asarray(free[: len(wave)], np.int32)
         self._insert_wave(slot_ids, wave_cache, lengths)
@@ -471,6 +581,7 @@ class ServingEngine:
         for row, (slot, req) in enumerate(zip(free, wave)):
             self.slots[slot] = req
             self._lengths[slot] = lengths[row]
+            self._adapter_ids[slot] = wave_ids[row]
             tok = int(first[row])
             self._last_token[slot] = tok
             req.output.append(tok)
@@ -519,6 +630,7 @@ class ServingEngine:
                 1, s_stage, shardings=self._chunk_sh
             ),
             "pos": 0,
+            "aid": self._req_adapter_id(req),
         }
 
     def _step_chunked(self) -> None:
@@ -533,9 +645,15 @@ class ServingEngine:
         n_valid = min(c, len(tokens) - pos)
         toks = np.zeros((1, c), np.int32)
         toks[0, :n_valid] = tokens[pos : pos + n_valid]
-        logits, st["staged"] = self._chunk_fn(
-            st["staged"], jnp.asarray(toks), pos, n_valid
-        )
+        if self.bank is not None:
+            logits, st["staged"] = self._chunk_fn(
+                st["staged"], jnp.asarray(toks), pos, n_valid,
+                jnp.asarray([st["aid"]], jnp.int32),
+            )
+        else:
+            logits, st["staged"] = self._chunk_fn(
+                st["staged"], jnp.asarray(toks), pos, n_valid
+            )
         self.stats["chunk_calls"] += 1
         st["pos"] = pos + n_valid
         if st["pos"] < len(tokens):
@@ -549,6 +667,7 @@ class ServingEngine:
         tok = int(jnp.argmax(logits[0, 0, : self.cfg.vocab_size]))
         self.slots[slot] = req
         self._lengths[slot] = len(tokens)
+        self._adapter_ids[slot] = st["aid"]
         self._last_token[slot] = tok
         req.output.append(tok)
         self._chunking = None
@@ -564,6 +683,7 @@ class ServingEngine:
         for slot, req in zip(free, wave):
             self.slots[slot] = req
             self._lengths[slot] = len(req.prompt)
+            self._adapter_ids[slot] = self._req_adapter_id(req)
         # replay: step all admitted slots together (inactive slots get pads
         # but their cache stripes are masked by the active-slot merge).
         for t in range(max_p):
@@ -573,7 +693,9 @@ class ServingEngine:
                 if t < len(req.prompt):
                     toks[slot, 0] = req.prompt[t]
                     active[slot] = True
-            logits, new_cache = self._decode(self.cache, jnp.asarray(toks))
+            logits, new_cache = self._decode(
+                *self._decode_args(jnp.asarray(toks))
+            )
             self.stats["decode_calls"] += 1
             self.cache = merge_cache_slots(
                 self.spec, new_cache, self.cache, active
@@ -593,6 +715,7 @@ class ServingEngine:
         the greedy stream exactly where it stopped."""
         req = self.slots[slot]
         self.slots[slot] = None
+        self._adapter_ids[slot] = 0
         self.pager.release(slot)
         self.queue.appendleft(req)
         self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
@@ -633,13 +756,8 @@ class ServingEngine:
             if not active.any():
                 return
         toks = jnp.asarray(self._last_token.reshape(-1, 1))
-        if self._paged:
-            # inactive/preempted slots write into the null block
-            logits, new_cache = self._decode(
-                self.cache, toks, self.pager.device_tables()
-            )
-        else:
-            logits, new_cache = self._decode(self.cache, toks)
+        # paged: inactive/preempted slots write into the null block
+        logits, new_cache = self._decode(*self._decode_args(toks))
         self.stats["decode_calls"] += 1
         self.cache = merge_cache_slots(
             self.spec, new_cache, self.cache, active,
@@ -660,6 +778,7 @@ class ServingEngine:
                     self._lengths[i] >= self.max_len - 1:
                 req.done = True
                 self.slots[i] = None
+                self._adapter_ids[i] = 0     # freed slots decode as base
                 if self._paged:
                     self.pager.release(i)   # free-on-eviction
         if self._paged:

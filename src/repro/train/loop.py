@@ -84,6 +84,17 @@ def make_train_step(
     ``dp_axes``: mesh axis names carrying data parallelism; required when
     running under a mesh with ``microbatches > 1`` (sharding constraint on
     the microbatch split)."""
+    backend = getattr(getattr(model, "cfg", None), "peft_backend",
+                      "reference")
+    if backend == "pallas":
+        # fail at construction with a clear message: the fused QuanTA
+        # kernels carry no custom VJP, so jax.grad through them dies with
+        # an opaque differentiation error deep inside the trace.
+        raise ValueError(
+            "cfg.peft_backend='pallas' is a forward/serving backend (the "
+            "QuanTA kernels have no training backward yet — see ROADMAP); "
+            "build the training model with peft_backend='reference'"
+        )
 
     def loss_fn(trainable, frozen, mb):
         if full_ft:

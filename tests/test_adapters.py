@@ -1,0 +1,285 @@
+"""Adapter-protocol conformance + attach/merge API behaviour.
+
+Every PEFT method implements ``repro.core.adapters.Adapter``
+(``apply / delta / matrix / merge / neutral / num_params``); these tests
+pin the algebraic contracts the attachment layer and the serving bank
+build on, for flat AND layer-stacked adapters, plus the ``attach`` ->
+``merge_all`` round trip (QuanTA's frozen-copy fold included) and the
+``cfg.peft_backend="pallas"`` kernel routing.
+"""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.adapters import RebasedAdapter
+from repro.core.baselines import DoraAdapter, KronaAdapter, LoraAdapter
+from repro.core.quanta import QuantaAdapter
+from repro.core.peft import (
+    AdapterSet,
+    PeftConfig,
+    attach,
+    merge_all,
+    peft_linear,
+)
+from repro.models import build_model
+
+D_IN, D_OUT = 16, 24
+
+
+def _perturb(adapter, key, scale=0.3):
+    """Zero-init adapters are trivially conformant; make them non-trivial."""
+    leaves, treedef = jax.tree_util.tree_flatten(adapter)
+    keys = jax.random.split(key, len(leaves))
+    leaves = [
+        l + scale * jax.random.normal(k, l.shape, l.dtype)
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _make(kind, key, d_in=D_IN, d_out=D_OUT):
+    if kind == "quanta":
+        return QuantaAdapter.create(key, d_in, d_out, n_axes=3)
+    if kind == "quanta_square":
+        return QuantaAdapter.create(key, d_in, d_in, n_axes=3)
+    if kind == "lora":
+        return LoraAdapter.create(key, d_in, d_out, rank=4)
+    if kind == "krona":
+        return KronaAdapter.create(key, d_in, d_out, a_in=4, a_out=4)
+    if kind == "dora":
+        w0 = jax.random.normal(jax.random.fold_in(key, 9), (d_in, d_out))
+        return DoraAdapter.create(key, w0, rank=4)
+    raise KeyError(kind)
+
+
+KINDS = ["quanta", "quanta_square", "lora", "krona", "dora"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_apply_matches_merged_weight(kind):
+    """Protocol contract #1: ``apply(x, w) == x @ merge(w)`` — runtime
+    application and the zero-overhead deployment fold agree."""
+    key = jax.random.PRNGKey(0)
+    ad = _perturb(_make(kind, key), jax.random.PRNGKey(1))
+    d_out = D_IN if kind == "quanta_square" else D_OUT
+    w = jax.random.normal(jax.random.PRNGKey(2), (D_IN, d_out))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 5, D_IN))
+    np.testing.assert_allclose(
+        np.asarray(ad.apply(x, w)), np.asarray(x @ ad.merge(w)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("kind", [k for k in KINDS if k != "dora"])
+def test_delta_matches_matrix(kind):
+    """Protocol contract #2 (delta-form methods): the factored ``delta``
+    equals multiplication by the materialized ``matrix``."""
+    ad = _perturb(_make(kind, jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    assert ad.delta_form
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, D_IN))
+    np.testing.assert_allclose(
+        np.asarray(ad.delta(x)), np.asarray(x @ ad.matrix()),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_neutral_is_identity(kind):
+    """Protocol contract #3: ``neutral(w).apply(x, w) == x @ w`` — the
+    bank's id-0 / non-member entry must be a no-op."""
+    ad = _make(kind, jax.random.PRNGKey(0))
+    d_out = D_IN if kind == "quanta_square" else D_OUT
+    w = jax.random.normal(jax.random.PRNGKey(2), (D_IN, d_out))
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, D_IN))
+    y = _perturb(ad, jax.random.PRNGKey(1)).neutral(w).apply(x, w)
+    if ad.delta_form:
+        # zero delta added to the base matmul: bitwise identity
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(x @ w), rtol=1e-6, atol=1e-6
+        )
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_stacked_protocol_under_vmap(kind):
+    """Layer-stacked adapters (leading L axis, sliced by lax.scan) keep
+    the apply==merge contract under vmap."""
+    n_layers = 3
+    d_out = D_IN if kind == "quanta_square" else D_OUT
+    keys = jax.random.split(jax.random.PRNGKey(0), n_layers)
+    ad = jax.vmap(lambda k: _make(kind, k))(keys)
+    ad = _perturb(ad, jax.random.PRNGKey(1))
+    w = jax.random.normal(jax.random.PRNGKey(2), (n_layers, D_IN, d_out))
+    x = jax.random.normal(jax.random.PRNGKey(3), (n_layers, 4, D_IN))
+    y = jax.vmap(lambda a, wl, xl: a.apply(xl, wl))(ad, w, x)
+    ref = jax.vmap(lambda a, wl, xl: xl @ a.merge(wl))(ad, w, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rebased_adapter_pins_its_base():
+    """RebasedAdapter applies against its stored base, not the shared w —
+    and its neutral is a no-op against the shared w."""
+    ad = _perturb(_make("quanta", jax.random.PRNGKey(0)),
+                  jax.random.PRNGKey(1))
+    w_shared = jax.random.normal(jax.random.PRNGKey(2), (D_IN, D_OUT))
+    w_tenant = jax.random.normal(jax.random.PRNGKey(3), (D_IN, D_OUT))
+    reb = RebasedAdapter(ad, w_tenant)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, D_IN))
+    np.testing.assert_array_equal(
+        np.asarray(reb.apply(x, w_shared)), np.asarray(ad.apply(x, w_tenant))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(reb.neutral(w_shared).apply(x, w_shared)),
+        np.asarray(x @ w_shared),
+    )
+    assert reb.num_params == ad.num_params  # the base is a serving artifact
+
+
+def test_num_params_counts_trainable_leaves():
+    lora = _make("lora", jax.random.PRNGKey(0))
+    assert lora.num_params == lora.a.size + lora.b.size
+    qa = _make("quanta", jax.random.PRNGKey(0))
+    assert qa.num_params == sum(t.size for t in qa.tensors)
+
+
+# ---------------------------------------------------------------- attach API
+METHODS = ["quanta", "lora", "krona", "dora"]
+
+
+def _attach_cfg(method):
+    return PeftConfig(method=method, scheme=None, n_axes=3, rank=4,
+                      krona_a=16)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_attach_merge_all_roundtrip_at_init(method):
+    """At init every adapter is a no-op, so merging the fresh AdapterSet
+    into the (possibly QuanTA-folded) base must reproduce the ORIGINAL
+    weights — the fold and the merge are exact inverses (Eq. 8/9)."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, aset = attach(jax.random.PRNGKey(1), params, _attach_cfg(method))
+    assert isinstance(aset, AdapterSet)
+    assert set(aset.paths) == {"layers/attn/q_proj", "layers/attn/v_proj"}
+    assert all(s.stacked for s in aset.specs)
+    merged = merge_all(base, aset)
+    for p0, pm in zip(jax.tree_util.tree_leaves(params),
+                      jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_allclose(
+            np.asarray(p0), np.asarray(pm), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_merge_all_many_targets():
+    """Many adapted paths through one merge (the per-path re-flatten used
+    to be recomputed inside the loop): every target merges correctly and
+    non-targets pass through untouched."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    targets = (r".*/(q_proj|k_proj|v_proj|o_proj|gate_proj|up_proj"
+               r"|down_proj)$",)
+    base, aset = attach(
+        jax.random.PRNGKey(1), params,
+        PeftConfig(method="lora", rank=2, targets=targets),
+    )
+    assert len(aset.paths) == 7
+    # train-ish perturbation so merges are non-trivial
+    aset = jax.tree_util.tree_map(
+        lambda x: x + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(2), x.shape, x.dtype
+        ),
+        aset,
+    )
+    merged = merge_all(base, aset)
+    from repro.core.peft import flatten_paths
+    fb, fm = flatten_paths(base), flatten_paths(merged)
+    flat_adapters = aset.flat()
+    for path in fb:
+        if path in flat_adapters:
+            ref = jax.vmap(lambda w, a: a.merge(w))(
+                fb[path], flat_adapters[path]
+            )
+            np.testing.assert_allclose(np.asarray(fm[path]), np.asarray(ref),
+                                       rtol=1e-6, atol=1e-6)
+        else:
+            assert fm[path] is fb[path], path
+
+
+def test_krona_degenerate_dims_raise():
+    """gcd-collapsed KronA factors (a 1 x 1 left factor) must raise, not
+    silently attach a near-empty adapter."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="krona_a=7.*near-empty"):
+        attach(jax.random.PRNGKey(1), params,
+               PeftConfig(method="krona", krona_a=7))
+
+
+def test_peft_linear_protocol_dispatch_and_bias():
+    ad = _perturb(_make("lora", jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    w = jax.random.normal(jax.random.PRNGKey(2), (D_IN, D_OUT))
+    b = jax.random.normal(jax.random.PRNGKey(3), (D_OUT,))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, D_IN))
+    np.testing.assert_allclose(
+        np.asarray(peft_linear(x, w, ad, b)),
+        np.asarray(ad.apply(x, w) + b), rtol=1e-6, atol=1e-6,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(peft_linear(x, w, None)), np.asarray(x @ w)
+    )
+
+
+def test_no_adapter_isinstance_dispatch_in_peft():
+    """API-redesign acceptance: the attachment layer contains no
+    per-adapter-class isinstance dispatch (the protocol IS the dispatch)."""
+    import repro.core.peft as peft_mod
+
+    src = inspect.getsource(peft_mod)
+    assert "isinstance(adapter" not in src
+    for cls in ("QuantaAdapter", "LoraAdapter", "DoraAdapter",
+                "KronaAdapter"):
+        assert f"isinstance(a, {cls}" not in src and \
+            f"isinstance(adapter, {cls}" not in src
+
+
+def test_train_step_rejects_pallas_backend():
+    """The fused QuanTA kernels carry no VJP: building a train step on a
+    pallas-backend model must fail loudly at construction, not with an
+    opaque differentiation error mid-trace."""
+    from repro.optim import AdamW
+    from repro.train import make_train_step
+
+    cfg = get_smoke("qwen2-0.5b").replace(peft_backend="pallas")
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="forward/serving backend"):
+        make_train_step(model, AdamW(lr=1e-3))
+
+
+def test_peft_backend_pallas_forward_parity():
+    """cfg.peft_backend="pallas" routes QuanTA adapted linears through the
+    fused kernels (interpret mode on CPU) — logits must match reference."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, aset = attach(
+        jax.random.PRNGKey(1), params,
+        PeftConfig(method="quanta", scheme=None, n_axes=3, noise_scale=0.3),
+    )
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(1, 255, (2, 24)), jnp.int32
+    )
+    ref, _ = model.forward(base, {"tokens": toks}, aset)
+    pl_model = build_model(cfg.replace(peft_backend="pallas"))
+    got, _ = pl_model.forward(base, {"tokens": toks}, aset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -168,6 +168,51 @@ def test_sharded_chunked_prefill_matches_one_shot():
 
 
 @multidevice
+def test_sharded_adapter_bank_matches_single_device():
+    """Multi-tenant acceptance, mesh leg: a bank engine serving a mixed
+    QuanTA + LoRA + base wave on the 2x`data` . 4x`model` mesh must
+    produce token-for-token what the single-device bank engine does
+    (which tests/test_adapter_bank.py pins against per-tenant
+    single-tenant engines) — dense AND paged, through slot churn."""
+    from repro.core.bank import AdapterBank
+    from repro.core.peft import PeftConfig, attach
+
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qbase, qset = attach(
+        jax.random.PRNGKey(1), params,
+        PeftConfig(method="quanta", scheme=None, n_axes=3, noise_scale=0.3),
+    )
+    _, lset = attach(jax.random.PRNGKey(2), params,
+                     PeftConfig(method="lora", rank=4))
+    lset = jax.tree_util.tree_map(
+        lambda x: x + 0.15 * jax.random.normal(
+            jax.random.PRNGKey(3), x.shape, x.dtype
+        ),
+        lset,
+    )
+    bank = AdapterBank.build(params, {"qa": (qbase, qset), "lo": lset})
+    tenants = ["qa", "lo", None, "qa", "lo", None, "qa", "lo"]
+
+    def run(mesh, cache):
+        engine = ServingEngine(model, params, adapters=bank, n_slots=4,
+                               max_len=64, mesh=mesh, cache=cache,
+                               block_size=8)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=5, adapter=t)
+                for i, (p, t) in enumerate(zip(PROMPTS, tenants))]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        assert all(r.done for r in reqs)
+        return [r.output for r in reqs]
+
+    base = run(None, "dense")
+    for mode in ("dense", "paged"):
+        assert run(_mesh(), mode) == base, mode
+
+
+@multidevice
 def test_sharded_prefill_admission_is_o1_dispatches():
     """O(1) jitted dispatch per admitted wave must survive the mesh: one
     prefill call and the tick's one fused decode, regardless of prompt
@@ -245,6 +290,57 @@ def test_dense_gauge_equals_addressable_bytes_single_device():
     assert addressable_nbytes(
         jax.tree_util.tree_leaves(engine.cache)[0]
     ) == int(jax.tree_util.tree_leaves(engine.cache)[0].nbytes)
+
+
+def test_peft_shardings_bank_axis_rules():
+    """Adapter placement rules (no devices needed): single sets replicate
+    every leaf; ``bank_dp=True`` shards exactly the bank axis of
+    bank-stacked group leaves over `data` (when divisible), keeping
+    ``id_maps`` and everything else replicated."""
+    from repro.core.bank import AdapterBank
+    from repro.core.peft import PeftConfig, attach
+    from repro.launch.shardings import peft_shardings
+
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    _, l1 = attach(jax.random.PRNGKey(1), params,
+                   PeftConfig(method="lora", rank=4))
+    _, l2 = attach(jax.random.PRNGKey(2), params,
+                   PeftConfig(method="lora", rank=4))
+    mesh = make_abstract_mesh((2, 4), ("data", "model"))
+
+    # single adapter set: all replicated
+    for s in jax.tree_util.tree_leaves(peft_shardings(mesh, l1)):
+        assert s.spec == P()
+
+    bank = AdapterBank.build(params, {"a": l1, "b": l2})
+    # default: bank replicated too (per-slot ids may need any tenant)
+    for s in jax.tree_util.tree_leaves(peft_shardings(mesh, bank)):
+        assert s.spec == P()
+    # bank_dp: stacked group leaves (L, G+1=3, ...) have a 3-extent bank
+    # axis — NOT divisible by data=2, so they stay replicated...
+    sh = peft_shardings(mesh, bank, bank_dp=True)
+    for s in jax.tree_util.tree_leaves(sh):
+        assert s.spec == P()
+    # ...while a 4-tenant bank (bank extent 5) still replicates, and a
+    # 3-tenant one (extent 4) DP-splits exactly the bank axis.
+    _, l3 = attach(jax.random.PRNGKey(3), params,
+                   PeftConfig(method="lora", rank=4))
+    bank3 = AdapterBank.build(params, {"a": l1, "b": l2, "c": l3})
+    sh3 = peft_shardings(mesh, bank3, bank_dp=True)
+    path = bank3.tree["layers"]["attn"]["q_proj"]
+    sh_path = sh3.tree["layers"]["attn"]["q_proj"]
+    group_specs = {
+        s.spec for s in jax.tree_util.tree_leaves(sh_path.groups)
+    }
+    assert group_specs == {P(None, ("data",), None, None)}
+    assert all(
+        l.shape[1] == 1 + bank3.num_tenants
+        for l in jax.tree_util.tree_leaves(path.groups)
+    )
+    for s in sh_path.id_maps:
+        assert s.spec == P()
 
 
 # ------------------------------------------------ pool sharding rules
