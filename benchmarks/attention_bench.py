@@ -91,10 +91,10 @@ def main(smoke: bool = False) -> None:
         kc = jax.random.normal(jax.random.PRNGKey(4), (BATCH, s_max, kvh, hd))
         vc = jax.random.normal(jax.random.PRNGKey(5), (BATCH, s_max, kvh, hd))
         lens = jnp.array([s_max // 3 + 1, s_max], jnp.int32)[:BATCH]
-        ref = jax.jit(lambda q, kc, vc, l: decode_attention(
-            q, kc, vc, l, window=window))
-        fl = jax.jit(lambda q, kc, vc, l: decode_attention(
-            q, kc, vc, l, window=window, kv_block=bk, backend="pallas"))
+        ref = jax.jit(lambda q, kc, vc, ln: decode_attention(
+            q, kc, vc, ln, window=window))
+        fl = jax.jit(lambda q, kc, vc, ln: decode_attention(
+            q, kc, vc, ln, window=window, kv_block=bk, backend="pallas"))
         np.testing.assert_allclose(
             np.asarray(ref(q, kc, vc, lens)),
             np.asarray(fl(q, kc, vc, lens)), **tol

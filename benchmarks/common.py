@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.peft import PeftConfig, attach, count_params
-from repro.core.quanta import QuantaAdapter, materialize
+from repro.core.quanta import materialize
 from repro.models import build_model
 from repro.models.common import ModelConfig
 from repro.optim import AdamW
@@ -110,16 +110,16 @@ def _perturb(kind: str, tensors, key, strength: float):
     out = []
     for j, t in enumerate(tensors):
         kj = jax.random.fold_in(key, j)
-        l, om, on, im, inn = t.shape
+        nlay, om, on, im, inn = t.shape
         if kind == "high":
             xi = jax.random.normal(kj, t.shape) * strength
         elif kind == "mid" and j < 2:
-            u = jax.random.normal(kj, (l, om * on, 2))
-            v = jax.random.normal(jax.random.fold_in(kj, 7), (l, 2, im * inn))
+            u = jax.random.normal(kj, (nlay, om * on, 2))
+            v = jax.random.normal(jax.random.fold_in(kj, 7), (nlay, 2, im * inn))
             xi = (u @ v).reshape(t.shape) * strength
         elif kind == "low" and j == 0:
-            u = jax.random.normal(kj, (l, om * on, 1))
-            v = jax.random.normal(jax.random.fold_in(kj, 7), (l, 1, im * inn))
+            u = jax.random.normal(kj, (nlay, om * on, 1))
+            v = jax.random.normal(jax.random.fold_in(kj, 7), (nlay, 1, im * inn))
             xi = (u @ v).reshape(t.shape) * strength
         else:
             xi = jnp.zeros_like(t)

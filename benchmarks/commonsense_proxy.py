@@ -14,10 +14,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import (
-    ATTACH_SEED, BENCH_CFG, DistillLoss, csv_row, finetune, make_task,
+    ATTACH_SEED, DistillLoss, csv_row, make_task,
     _accuracy,
 )
 from repro.core.peft import PeftConfig, attach, count_params

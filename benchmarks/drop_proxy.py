@@ -7,7 +7,6 @@ required update is high-rank (paper §3, Thm. 6.2)."""
 
 from __future__ import annotations
 
-import time
 
 from benchmarks.common import csv_row, finetune, make_task
 

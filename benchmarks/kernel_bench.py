@@ -16,11 +16,9 @@ implementation does) for CPU-relative comparison.
 from __future__ import annotations
 
 import argparse
-import math
 import time
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import csv_row
 from repro.core import QuantaAdapter

@@ -40,7 +40,7 @@ from repro.configs import get_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.core.bank import AdapterBank
 from repro.core.peft import PeftConfig, attach, merge_all
-from repro.data import ByteTokenizer, SyntheticSeq2Task
+from repro.data import SyntheticSeq2Task
 from repro.models import build_model
 from repro.optim import AdamW
 from repro.serve import Request, ServingEngine

@@ -1,0 +1,31 @@
+"""Static analysis and sanitizer tooling for the repro codebase.
+
+Three parts, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.kernels` — the Pallas kernel-contract checker:
+  registered kernels have their real grid/BlockSpec construction
+  captured and every index map concretely enumerated (in-bounds
+  addressing, exactly-once output coverage, VMEM footprint vs budget,
+  dtype contracts) with no device needed.
+* :mod:`repro.analysis.lint` — the JAX trace-hazard linter: AST rules
+  for traced conditionals, bad static args, hot-path host jnp work,
+  mutable defaults, and broad excepts, with per-line waivers and a
+  committed-clean baseline.
+* :mod:`repro.analysis.sanitize` — the ``REPRO_SANITIZE=1`` runtime
+  sanitizer: tracer-leak checking plus per-entry-point compile-count
+  guards on the serving engine.
+"""
+
+from repro.analysis.kernels import (  # noqa: F401
+    Finding,
+    check_kernels,
+    register_kernel,
+    registered_kernels,
+)
+from repro.analysis.lint import LintFinding, lint_paths, lint_source  # noqa: F401
+from repro.analysis.sanitize import (  # noqa: F401
+    CompileGuard,
+    RetraceError,
+    enabled,
+    install,
+)

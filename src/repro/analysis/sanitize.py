@@ -1,0 +1,153 @@
+"""Retrace/leak sanitizer: runtime guards behind ``REPRO_SANITIZE=1``.
+
+Two mechanisms:
+
+* **Tracer-leak checking** — ``install()`` flips
+  ``jax_check_tracer_leaks`` on, so a traced value escaping its trace
+  (stashed on ``self``, closed over across jits) raises at the leak
+  site instead of surfacing later as an inscrutable constant-folding
+  bug.
+* **Compile counting** — every jitted ``ServingEngine`` entry point is
+  registered on a :class:`CompileGuard` with its *documented*
+  compilation bound (see ``ServingEngine.compilation_bounds``).  The
+  guard reads each function's jit cache size (the number of distinct
+  traces actually compiled) and raises :class:`RetraceError` when an
+  entry point exceeds its bound — the O(1)-dispatch discipline the
+  engine's shape-bucketing exists to provide, enforced continuously
+  rather than by one-off tests.  A global compile counter (hooked via
+  ``jax.monitoring``'s ``backend_compile`` duration event) is also kept
+  for workload-level assertions.
+
+``install()`` is idempotent and cheap; the serving engine calls
+:meth:`CompileGuard.assert_ok` once per tick only when the sanitizer is
+enabled, so production ticks pay nothing.
+
+Enable for a test run with::
+
+    REPRO_SANITIZE=1 python -m pytest tests/ -m "not perf"
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+__all__ = [
+    "CompileGuard",
+    "RetraceError",
+    "enabled",
+    "install",
+    "installed",
+    "global_compile_count",
+]
+
+
+def enabled() -> bool:
+    """True when ``REPRO_SANITIZE`` is set to a truthy value."""
+    return os.environ.get("REPRO_SANITIZE", "").lower() in (
+        "1", "true", "yes", "on",
+    )
+
+
+class RetraceError(AssertionError):
+    """A jitted entry point compiled more traces than its documented bound."""
+
+
+# ---------------------------------------------------------------- installer
+
+_installed = False
+_global_compiles = 0
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+def _on_event_duration(event: str, *args, **kwargs) -> None:
+    global _global_compiles
+    if event == _COMPILE_EVENT:
+        _global_compiles += 1
+
+
+def install() -> None:
+    """Enable tracer-leak checking and the global compile counter.
+
+    Idempotent; safe to call from ``conftest.py`` at collection time.
+    """
+    global _installed
+    if _installed:
+        return
+    jax.config.update("jax_check_tracer_leaks", True)
+    jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
+    _installed = True
+
+
+def installed() -> bool:
+    return _installed
+
+
+def global_compile_count() -> int:
+    """Backend compiles observed since :func:`install` (0 if never installed)."""
+    return _global_compiles
+
+
+# ------------------------------------------------------------ compile guard
+
+@dataclasses.dataclass
+class _Entry:
+    fn: Callable
+    bound: int
+
+    def cache_size(self) -> int:
+        return self.fn._cache_size()
+
+
+class CompileGuard:
+    """Tracks jitted entry points against their compilation bounds.
+
+    Each registered function's jit cache size — the number of distinct
+    ``(shapes, dtypes, statics)`` signatures actually traced — must stay
+    within the declared ``bound``.  Eager (non-jitted) callables are
+    skipped at registration so callers can register unconditionally.
+    """
+
+    def __init__(self, name: str = "engine"):
+        self.name = name
+        self._entries: Dict[str, _Entry] = {}
+
+    def register(self, name: str, fn: Optional[Callable],
+                 bound: int) -> None:
+        """Track ``fn`` under ``name``; no-op for ``None``/eager fns."""
+        if fn is None or not hasattr(fn, "_cache_size"):
+            return
+        self._entries[name] = _Entry(fn, bound)
+
+    @property
+    def entry_points(self) -> List[str]:
+        return sorted(self._entries)
+
+    def counts(self) -> Dict[str, int]:
+        """Current compile count per registered entry point."""
+        return {n: e.cache_size() for n, e in sorted(self._entries.items())}
+
+    def bounds(self) -> Dict[str, int]:
+        return {n: e.bound for n, e in sorted(self._entries.items())}
+
+    def violations(self) -> List[str]:
+        out = []
+        for name, entry in sorted(self._entries.items()):
+            n = entry.cache_size()
+            if n > entry.bound:
+                out.append(
+                    f"{self.name}.{name}: {n} compilations exceed the "
+                    f"documented bound of {entry.bound} — a shape, dtype, "
+                    "or static argument is varying per call (retrace leak)"
+                )
+        return out
+
+    def assert_ok(self) -> None:
+        """Raise :class:`RetraceError` if any entry point exceeds its bound."""
+        bad = self.violations()
+        if bad:
+            raise RetraceError("; ".join(bad))

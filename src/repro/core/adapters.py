@@ -95,7 +95,7 @@ class Adapter:
 
     @property
     def num_params(self) -> int:
-        return sum(int(l.size) for l in jax.tree_util.tree_leaves(self))
+        return sum(int(leaf.size) for leaf in jax.tree_util.tree_leaves(self))
 
 
 @jax.tree_util.register_dataclass

@@ -11,7 +11,6 @@
 
 from __future__ import annotations
 
-import math
 from typing import Sequence, Tuple
 
 import jax.numpy as jnp

@@ -51,7 +51,7 @@ tenants as the ``(folded_params, adapter_set)`` pair ``attach`` returned.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +104,7 @@ class BankedAdapter(Adapter):
         y = x @ w
         for g, lid, dform in zip(self.groups, self.ids, self.delta_forms):
             sel = jax.tree_util.tree_map(
-                lambda l: jnp.take(l, lid, axis=0), g
+                lambda leaf: jnp.take(leaf, lid, axis=0), g
             )
             if dform:
                 # neutral rows contribute an exact 0
@@ -268,8 +268,8 @@ class AdapterBank:
                 sig = (
                     jax.tree_util.tree_structure(adapter),
                     tuple(
-                        (tuple(l.shape), str(jnp.asarray(l).dtype))
-                        for l in jax.tree_util.tree_leaves(adapter)
+                        (tuple(leaf.shape), str(jnp.asarray(leaf).dtype))
+                        for leaf in jax.tree_util.tree_leaves(adapter)
                     ),
                 )
                 sigs.setdefault(sig, []).append((t_idx, adapter))

@@ -41,7 +41,6 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.adapters import Adapter
 from repro.core.factorize import factorize, pair_schedule, param_count

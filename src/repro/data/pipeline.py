@@ -19,7 +19,7 @@ planted on the embedding geometry, so "task rank" is an experimental knob.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Sequence
 
 import numpy as np
 

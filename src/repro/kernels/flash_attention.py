@@ -171,9 +171,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(j == n_k - 1)
     def _finalize():
-        l = l_ref[:, :1]
+        denom = l_ref[:, :1]
         o_ref[0, :, 0, :] = (
-            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+            acc_ref[...] / jnp.where(denom == 0.0, 1.0, denom)
         ).astype(o_ref.dtype)
 
 
@@ -474,9 +474,9 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     @pl.when(j == n_k - 1)
     def _finalize():
-        l = l_ref[:, :1]
+        denom = l_ref[:, :1]
         o_ref[0, 0] = (
-            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+            acc_ref[...] / jnp.where(denom == 0.0, 1.0, denom)
         ).astype(o_ref.dtype)
 
 
@@ -606,9 +606,9 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == n_b - 1)
     def _finalize():
-        l = l_ref[:, :1]
+        denom = l_ref[:, :1]
         o_ref[0, 0] = (
-            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+            acc_ref[...] / jnp.where(denom == 0.0, 1.0, denom)
         ).astype(o_ref.dtype)
 
 

@@ -11,19 +11,16 @@ the same kernels via Mosaic).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.quanta import QuantaAdapter
 from repro.kernels.quanta_apply import quanta_apply_kernel_call
 from repro.kernels.quanta_linear import quanta_linear_kernel_call
+from repro.kernels.vmem import VMEM_BUDGET_BYTES, vmem_footprint
 
 __all__ = ["quanta_apply_fused", "quanta_linear_fused", "fused_vmem_ok"]
-
-VMEM_BUDGET_BYTES = 12 * 2**20  # ~12 MiB usable of 16 MiB v5e VMEM
 
 
 def _flatten_rows(x: jnp.ndarray, block_rows: int):
@@ -58,13 +55,20 @@ def quanta_apply_fused(
 def fused_vmem_ok(d_in: int, d_out: int, adapter: QuantaAdapter,
                   block_rows: int, block_cols: int,
                   dtype_bytes: int = 2) -> bool:
-    """Does one grid step's working set fit the VMEM budget?"""
-    x_tile = block_rows * d_in * dtype_bytes
-    w_tile = d_in * block_cols * dtype_bytes
-    scratch = block_rows * d_out * 4
-    tensors = sum(t.size for t in adapter.tensors) * dtype_bytes
-    out_tile = block_rows * block_cols * dtype_bytes
-    return x_tile + w_tile + scratch + tensors + out_tile < VMEM_BUDGET_BYTES
+    """Does one grid step's working set fit the VMEM budget?
+
+    Same arithmetic as the contract checker (`repro.analysis.kernels`):
+    one x tile + one weight column tile + the fp32 delta scratch + the
+    full tensor chain + one output tile, via the shared
+    ``kernels.vmem.vmem_footprint``.
+    """
+    footprint = vmem_footprint([
+        ((block_rows, d_in), dtype_bytes),           # x tile
+        ((d_in, block_cols), dtype_bytes),           # weight column tile
+        ((block_rows, d_out), 4),                    # fp32 delta scratch
+        ((block_rows, block_cols), dtype_bytes),     # output tile
+    ] + [(t.shape, dtype_bytes) for t in adapter.tensors])
+    return footprint < VMEM_BUDGET_BYTES
 
 
 def quanta_linear_fused(

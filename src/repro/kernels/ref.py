@@ -7,7 +7,6 @@ sequential-matmul path; the tests cross-check all three.
 
 from __future__ import annotations
 
-import math
 from typing import Sequence, Tuple
 
 import jax.numpy as jnp

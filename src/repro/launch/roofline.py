@@ -21,8 +21,6 @@ capacity-factor overhead.
 
 from __future__ import annotations
 
-import dataclasses
-import math
 import re
 from typing import Any, Dict, Optional
 
@@ -104,7 +102,7 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
 
 def active_param_count(cfg: ModelConfig) -> Dict[str, float]:
     """Analytic parameter counts (total and active-per-token)."""
-    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    d, ff, nl = cfg.d_model, cfg.d_ff, cfg.n_layers
     vpad = padded_vocab(cfg.vocab_size)
     embed = vpad * d * (1 if cfg.tie_embeddings else 2)
     if cfg.frontend == "audio_tokens":
@@ -120,7 +118,7 @@ def active_param_count(cfg: ModelConfig) -> Dict[str, float]:
             + cfg.conv_kernel * (di + 2 * cfg.ssm_state)
             + di * d + di + d                # out_proj + norms
         )
-        total = l * per_layer + embed
+        total = nl * per_layer + embed
         return {"total": total, "active": total}
 
     if cfg.family == "hybrid":
@@ -128,8 +126,8 @@ def active_param_count(cfg: ModelConfig) -> Dict[str, float]:
         rec = d * dr * 2 + cfg.conv_kernel * dr + 2 * dr * dr + dr + dr * d
         mlp = 3 * d * ff
         attn = d * cfg.attn_dim + 2 * d * cfg.kv_dim + cfg.attn_dim * d
-        n_macro = l // cfg.attn_period
-        n_tail = l - n_macro * cfg.attn_period
+        n_macro = nl // cfg.attn_period
+        n_tail = nl - n_macro * cfg.attn_period
         total = (
             n_macro * (2 * rec + attn + 3 * mlp)
             + n_tail * (rec + mlp)
@@ -141,10 +139,10 @@ def active_param_count(cfg: ModelConfig) -> Dict[str, float]:
     if cfg.is_moe:
         expert = 3 * d * ff
         router = d * cfg.n_experts
-        total = l * (attn + router + cfg.n_experts * expert) + embed
-        active = l * (attn + router + cfg.top_k * expert) + embed
+        total = nl * (attn + router + cfg.n_experts * expert) + embed
+        active = nl * (attn + router + cfg.top_k * expert) + embed
         return {"total": total, "active": active}
-    total = l * (attn + 3 * d * ff) + embed
+    total = nl * (attn + 3 * d * ff) + embed
     return {"total": total, "active": total}
 
 

@@ -35,13 +35,11 @@ from __future__ import annotations
 
 import math
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.peft import flatten_paths
 from repro.launch.mesh import dp_axes
 from repro.models.common import ModelConfig, PagedCacheLeafSpec
 

@@ -16,7 +16,6 @@ import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.peft import PeftConfig, attach
 from repro.models.api import build_model, input_specs

@@ -24,7 +24,7 @@ against.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

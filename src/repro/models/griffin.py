@@ -19,7 +19,7 @@ decoding feasible (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,6 @@ from repro.models.common import (
     ModelConfig,
     PagedCacheLeafSpec,
     apply_rope,
-    cross_entropy_loss,
     dense_init,
     embed_init,
     fused_cross_entropy,

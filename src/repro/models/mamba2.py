@@ -22,7 +22,7 @@ TPU-native mapping of the sequential chunk loop.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,6 @@ from repro.core.peft import adapter_subtree, get_adapter, peft_linear
 from repro.models.common import (
     CacheLeafSpec,
     ModelConfig,
-    cross_entropy_loss,
     dense_init,
     embed_init,
     fused_cross_entropy,
@@ -40,7 +39,7 @@ from repro.models.common import (
     place_cache,
     rms_norm,
 )
-from repro.models.transformer import _mask_vocab_pad, get_subtree, padded_vocab
+from repro.models.transformer import _mask_vocab_pad, padded_vocab
 
 __all__ = ["Mamba2"]
 

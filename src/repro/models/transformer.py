@@ -9,9 +9,7 @@ along the same axis and sliced by the scan in lockstep (see
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +26,6 @@ from repro.models.common import (
     ModelConfig,
     PagedCacheLeafSpec,
     apply_rope,
-    cross_entropy_loss,
     dense_init,
     embed_init,
     fused_cross_entropy,
@@ -454,7 +451,6 @@ class Transformer:
             x = params["embed"]["tokens"][batch["tokens"]].astype(
                 cfg.compute_dtype
             )                                                   # (B, 1, d)
-        b = x.shape[0]
         new_len = cache["len"] + 1
         positions = (new_len - 1)[:, None]                      # (B, 1)
         rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)

@@ -109,6 +109,28 @@ Adapters (single-tenant vs multi-tenant):
   sharded).  Under a mesh the bank is placed by
   ``launch.shardings.peft_shardings`` (replicated by default; the bank
   axis can be DP-split).
+
+Correctness tooling (``repro.analysis``):
+
+* every jitted entry point is registered on a
+  ``repro.analysis.sanitize.CompileGuard`` (``engine.compile_guard``)
+  with its documented compilation bound — see ``compilation_bounds()``:
+  fused decode and chunked prefill compile exactly once (+1 jit
+  signature-cache slack under a mesh for the first tick's freshly
+  placed cache), the prefill wave compiles at most
+  ``ceil(max_len / seq_bucket)`` token buckets, and the mesh-jitted
+  insert scatter is bounded by the distinct ``(wave rows, token
+  bucket)`` layouts it scatters.
+* with ``REPRO_SANITIZE=1`` (see ``repro.analysis.sanitize.install``)
+  the engine asserts those bounds every tick — a shape/dtype/static
+  leaking into an entry point raises ``RetraceError`` at the tick that
+  retraced, and ``jax_check_tracer_leaks`` catches traced values
+  escaping their trace.  Tests can assert through the same API
+  (``engine.compile_guard.counts()`` / ``assert_ok()``) instead of
+  bespoke dispatch counters.
+* the Pallas kernels the engine dispatches to are statically verified
+  by ``python -m repro.analysis --check`` (grid/index-map/VMEM/dtype
+  contracts; see ``repro.analysis.kernels`` for registering new ones).
 """
 
 from __future__ import annotations
@@ -123,6 +145,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis import sanitize
 from repro.models.common import merge_cache_slots, reset_cache_slots
 from repro.serve.paging import PagedCacheView, addressable_nbytes
 
@@ -273,8 +296,8 @@ class ServingEngine:
             # per-host adapter-state bytes: one AdapterSet, or the whole
             # bank (N tenants + neutral rows + any QuanTA rebase weights)
             "adapter_bytes": int(sum(
-                addressable_nbytes(l)
-                for l in jax.tree_util.tree_leaves(served)
+                addressable_nbytes(leaf)
+                for leaf in jax.tree_util.tree_leaves(served)
             )) if served is not None else 0,
             "adapter_tenants": (
                 self.bank.num_tenants if self.bank is not None else 0
@@ -414,7 +437,59 @@ class ServingEngine:
                 in_shardings=(cache_sh, repl, None, None),
                 out_shardings=cache_sh,
             )
+
+        # Correctness tooling: every jitted entry point carries its
+        # documented compilation bound (eager fns are skipped inside
+        # register).  Asserted per tick under REPRO_SANITIZE=1; tests
+        # assert through the same API.
+        bounds = self.compilation_bounds()
+        self.compile_guard = sanitize.CompileGuard("ServingEngine")
+        self.compile_guard.register("decode", self._decode, bounds["decode"])
+        self.compile_guard.register("prefill", self._prefill,
+                                    bounds["prefill"])
+        self.compile_guard.register("chunk", self._chunk_fn, bounds["chunk"])
+        self.compile_guard.register("insert", self._insert_fn,
+                                    bounds["insert"])
         self._update_gauges()
+
+    # ------------------------------------------------------ compile bounds
+    def compilation_bounds(self) -> Dict[str, int]:
+        """Documented compilation bound per jitted entry point.
+
+        * ``decode`` — 1: every tick decodes the full fixed-shape slot
+          batch (block tables are traced args of fixed shape, adapter
+          ids a traced ``(B,)`` vector), so the fused decode step
+          compiles exactly once.
+        * ``prefill`` — ``ceil(max_len / seq_bucket)``: waves are padded
+          to ``n_slots`` rows and the token axis is bucketed, so at most
+          one compile per token bucket.
+        * ``chunk`` — 1: chunked prefill always feeds fixed
+          ``(1, prefill_chunk)`` token blocks into a fixed-shape staging
+          buffer.
+        * ``insert`` — ``n_slots * (n_buckets + 2)``: the scatter (jitted
+          only under a mesh) sees one layout per distinct
+          ``(wave rows, token bucket)`` pair; chunked staging adds
+          single-row layouts whose token extent may exceed ``max_len``
+          by up to ``prefill_chunk + seq_bucket``.
+
+        Under a mesh, cache-carrying entry points get **+1 slack**: the
+        first tick feeds the freshly ``device_put`` cache, whose
+        argument-placement signature differs from the steady-state jit
+        outputs — the jit signature cache gains one entry WITHOUT a
+        second backend compile (verified via ``jax_log_compiles``), and
+        ``_cache_size()`` counts signatures.
+
+        ``compile_guard`` enforces these every tick when
+        ``REPRO_SANITIZE=1`` (``repro.analysis.sanitize``).
+        """
+        n_buckets = -(-self.max_len // self.seq_bucket)
+        slack = 1 if self.mesh is not None else 0
+        return {
+            "decode": 1 + slack,
+            "prefill": n_buckets,
+            "chunk": 1 + slack,
+            "insert": self.n_slots * (n_buckets + 2),
+        }
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request, adapter: Optional[str] = None) -> None:
@@ -576,7 +651,7 @@ class ServingEngine:
         slot_ids = np.asarray(free[: len(wave)], np.int32)
         self._insert_wave(slot_ids, wave_cache, lengths)
         first = np.asarray(
-            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32
+            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32  # repro: allow(host-jnp) greedy sampling: one argmax+D2H per tick is the sampler, not a leak
         )
         for row, (slot, req) in enumerate(zip(free, wave)):
             self.slots[slot] = req
@@ -664,7 +739,9 @@ class ServingEngine:
             np.asarray([slot], np.int32), st["staged"],
             np.asarray([len(tokens)], np.int32),
         )
-        tok = int(jnp.argmax(logits[0, 0, : self.cfg.vocab_size]))
+        tok = int(jnp.argmax(  # repro: allow(host-jnp) greedy sampling: one argmax+D2H per chunk is the sampler, not a leak
+            logits[0, 0, : self.cfg.vocab_size]
+        ))
         self.slots[slot] = req
         self._lengths[slot] = len(tokens)
         self._adapter_ids[slot] = st["aid"]
@@ -702,7 +779,7 @@ class ServingEngine:
             )
             for slot, req in zip(free, wave):
                 if t == len(req.prompt) - 1:
-                    nxt = int(jnp.argmax(
+                    nxt = int(jnp.argmax(  # repro: allow(host-jnp) greedy sampling during replay, not a leak
                         logits[slot, 0, : self.cfg.vocab_size]
                     ))
                     self._last_token[slot] = nxt
@@ -764,7 +841,7 @@ class ServingEngine:
             skip_paged=self._paged,
         )
         nxt = np.asarray(
-            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32
+            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32  # repro: allow(host-jnp) greedy sampling: one argmax+D2H per tick is the sampler, not a leak
         )
         for i, req in enumerate(self.slots):
             if req is None:
@@ -783,6 +860,8 @@ class ServingEngine:
                     self.pager.release(i)   # free-on-eviction
         if self._paged:
             self._update_gauges()
+        if sanitize.enabled():
+            self.compile_guard.assert_ok()
 
     def run(self, max_ticks: int = 10_000) -> None:
         ticks = 0

@@ -15,12 +15,11 @@ top of the same primitives (recorded as future work in EXPERIMENTS.md).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["pipeline_apply", "bubble_fraction"]
 

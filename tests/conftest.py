@@ -36,6 +36,14 @@ if os.environ.get("REPRO_FORCE_MULTIDEVICE") == "1" and \
 import jax  # noqa: E402  (after the device-count flag)
 import pytest  # noqa: E402
 
+from repro.analysis import sanitize  # noqa: E402
+
+if sanitize.enabled():
+    # REPRO_SANITIZE=1: tracer-leak checking + compile counting for the
+    # whole run; the serving engine additionally asserts its per-entry-
+    # point compile bounds every tick (see ServingEngine.compile_guard).
+    sanitize.install()
+
 
 def pytest_configure(config):
     config.addinivalue_line(

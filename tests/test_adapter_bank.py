@@ -16,8 +16,6 @@ Covered here (single-device; the mesh leg lives in
 """
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_peft, get_smoke
@@ -35,8 +33,8 @@ def _noise(tree, key, scale=0.15):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     return jax.tree_util.tree_unflatten(treedef, [
-        l + scale * jax.random.normal(k, l.shape, l.dtype)
-        for l, k in zip(leaves, keys)
+        leaf + scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+        for leaf, k in zip(leaves, keys)
     ])
 
 

@@ -36,8 +36,8 @@ def _perturb(adapter, key, scale=0.3):
     leaves, treedef = jax.tree_util.tree_flatten(adapter)
     keys = jax.random.split(key, len(leaves))
     leaves = [
-        l + scale * jax.random.normal(k, l.shape, l.dtype)
-        for l, k in zip(leaves, keys)
+        leaf + scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+        for leaf, k in zip(leaves, keys)
     ]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

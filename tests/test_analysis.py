@@ -1,0 +1,290 @@
+"""repro.analysis: the analyses must PASS on the repo and FAIL on seeded
+violations — a checker that can't fail checks nothing.
+
+Covers the kernel-contract checker (out-of-bounds index map, missed
+output coverage, over-budget VMEM, dtype contract), the trace-hazard
+linter (traced-`if`, mutable default, broad except, hot-path jnp, waiver
+suppression), and the retrace sanitizer (a shape-polymorphic jit must
+trip its compile bound).
+"""
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis import kernels as ak
+from repro.analysis import lint as al
+from repro.analysis import sanitize
+from repro.analysis.kernels import PallasCallRecord, check_record
+from repro.kernels.vmem import VMEM_BUDGET_BYTES, vmem_footprint
+
+
+# --------------------------------------------------------------- helpers
+
+def _record(in_map, out_map, *, grid=(2, 2), shape=(4, 4), block=(2, 2),
+            scratch=(), out_dtype=jnp.float32):
+    return PallasCallRecord(
+        name="seeded",
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, in_map)],
+        out_specs=[pl.BlockSpec(block, out_map)],
+        out_shapes=[jax.ShapeDtypeStruct(shape, out_dtype)],
+        scratch_shapes=list(scratch),
+        operands=[jax.ShapeDtypeStruct(shape, jnp.float32)],
+    )
+
+
+def _checks(rec, **kw):
+    kw.setdefault("vmem_budget", VMEM_BUDGET_BYTES)
+    return {f.check for f in check_record("seed", "case", rec, **kw)}
+
+
+# ----------------------------------------------- kernel contract checker
+
+def test_repo_kernels_all_clean_and_registered():
+    """The real kernels must pass, and all five families are registered."""
+    assert ak.registered_kernels() == [
+        "flash_decode", "flash_fwd", "paged_decode",
+        "quanta_apply", "quanta_linear",
+    ]
+    findings = ak.check_kernels()
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_seeded_out_of_bounds_index_map_is_caught():
+    rec = _record(lambda i, j: (i + 1, j),    # walks off the last row block
+                  lambda i, j: (i, j))
+    assert "in-bounds" in _checks(rec)
+
+
+def test_seeded_coverage_hole_is_caught():
+    # output map pins the row-block to 0: row-block 1 is never written
+    rec = _record(lambda i, j: (i, j), lambda i, j: (0, j))
+    assert "coverage" in _checks(rec)
+
+
+def test_seeded_nonuniform_multiplicity_is_caught():
+    # grid points (0,*) and (1,0) all land on out block (0,0); (1,1) on
+    # (1,1): blocks see different reduction depths and (0,1)/(1,0) are
+    # never written
+    rec = _record(lambda i, j: (i, j),
+                  lambda i, j: (i * j, i * j))
+    assert "coverage" in _checks(rec)
+
+
+def test_seeded_over_budget_vmem_is_caught():
+    big = 4096
+    rec = _record(lambda i, j: (i, j), lambda i, j: (i, j),
+                  grid=(1, 1), shape=(big, big), block=(big, big))
+    assert "vmem" in _checks(rec)
+    # and the shared footprint API agrees: 2 x 4096^2 fp32 blocks > 12MiB
+    assert vmem_footprint([((big, big), jnp.float32)] * 2) \
+        > VMEM_BUDGET_BYTES
+
+
+def test_seeded_non_fp32_scratch_is_caught():
+    import jax.experimental.pallas.tpu as pltpu
+
+    rec = _record(lambda i, j: (i, j), lambda i, j: (i, j),
+                  scratch=[pltpu.VMEM((2, 2), jnp.bfloat16)])
+    assert "dtype" in _checks(rec)
+    assert "dtype" not in _checks(rec, fp32_scratch=False)
+
+
+def test_seeded_out_dtype_mismatch_is_caught():
+    rec = _record(lambda i, j: (i, j), lambda i, j: (i, j),
+                  out_dtype=jnp.float16)       # operand 0 is fp32
+    assert "dtype" in _checks(rec)
+    assert "dtype" not in _checks(rec, out_dtype_like=None)
+
+
+def test_capture_records_real_grid_and_specs():
+    """The capture context must record the production pallas_call verbatim
+    (grid, specs, operands) while the wrapper runs unmodified."""
+    from repro.kernels.quanta_apply import quanta_apply_kernel_call
+    from repro.core.quanta import QuantaAdapter
+
+    adapter = QuantaAdapter.create(
+        jax.random.PRNGKey(0), 64, 64, dims_in=(8, 8), dtype=jnp.float32
+    )
+    x = jnp.ones((128, 64), jnp.float32)
+    with ak.capture_pallas_calls() as records:
+        out = quanta_apply_kernel_call(
+            x, list(adapter.tensors), adapter.dims_in, adapter.pairs,
+            block_rows=64,
+        )
+    assert out.shape == (128, 64)              # wrapper ran end to end
+    (rec,) = records
+    assert rec.grid == (2,)                    # 128 rows / 64 block_rows
+    assert len(rec.in_specs) == len(rec.operands)
+
+
+# --------------------------------------------------- trace-hazard linter
+
+def _lint(code):
+    return al.lint_source(textwrap.dedent(code), "seed.py")
+
+
+def test_traced_if_in_jitted_fn_is_caught():
+    fs = _lint("""
+        import jax
+
+        @jax.jit
+        def f(x, n):
+            if n > 0:
+                return x + 1
+            return x
+    """)
+    assert [f.rule for f in fs] == ["traced-cond"]
+
+
+def test_traced_while_in_scanned_fn_is_caught():
+    fs = _lint("""
+        import jax
+
+        def body(carry, x):
+            while x > 0:
+                carry = carry + 1
+            return carry, x
+
+        def run(xs):
+            return jax.lax.scan(body, 0, xs)
+    """)
+    assert [f.rule for f in fs] == ["traced-cond"]
+
+
+def test_static_none_test_is_not_flagged():
+    fs = _lint("""
+        import jax
+
+        @jax.jit
+        def f(x, mask):
+            if mask is None:
+                return x
+            return x * mask
+    """)
+    assert fs == []
+
+
+def test_waiver_suppresses_finding():
+    fs = _lint("""
+        import jax
+
+        @jax.jit
+        def f(x, n):
+            if n > 0:  # repro: allow(traced-cond) n is a static python int here
+                return x + 1
+            return x
+    """)
+    assert fs == []
+
+
+def test_mutable_default_and_broad_except_are_caught():
+    fs = _lint("""
+        def f(x, acc=[]):
+            try:
+                acc.append(x)
+            except Exception:
+                pass
+            return acc
+    """)
+    assert sorted(f.rule for f in fs) == ["broad-except", "mutable-default"]
+
+
+def test_broad_except_with_reraise_is_allowed():
+    fs = _lint("""
+        def f(x):
+            try:
+                return x()
+            except Exception:
+                print("cleanup")
+                raise
+    """)
+    assert fs == []
+
+
+def test_hot_path_jnp_is_caught_and_asarray_allowed():
+    fs = _lint("""
+        import jax.numpy as jnp
+
+        class ServingEngine:
+            def step(self):
+                toks = jnp.asarray(self.host_buf)     # allowed H2D upload
+                return jnp.argmax(self.logits)        # per-tick device op
+    """)
+    assert [f.rule for f in fs] == ["host-jnp"]
+    assert "argmax" in fs[0].message
+
+
+def test_array_valued_jit_kwarg_is_caught():
+    fs = _lint("""
+        import jax
+        import jax.numpy as jnp
+
+        g = jax.jit(lambda x: x, donate=jnp.ones(3))
+    """)
+    assert [f.rule for f in fs] == ["static-arg"]
+
+
+def test_repo_lints_clean():
+    import repro
+
+    findings = al.lint_paths(
+        [list(repro.__path__)[0]], baseline=al.load_baseline()
+    )
+    assert findings == [], [str(f) for f in findings]
+
+
+# ------------------------------------------------------ retrace sanitizer
+
+def test_compile_guard_trips_on_retrace():
+    """A shape-polymorphic jit must exceed its bound=1 the moment a second
+    shape compiles — the exact failure mode the engine guards against."""
+    fn = jax.jit(lambda x: x * 2)
+    guard = sanitize.CompileGuard("seed")
+    guard.register("poly", fn, bound=1)
+
+    fn(jnp.ones((4,)))
+    guard.assert_ok()                          # one shape, within bound
+    assert guard.counts() == {"poly": 1}
+
+    fn(jnp.ones((8,)))                         # second shape -> retrace
+    assert guard.counts() == {"poly": 2}
+    with pytest.raises(sanitize.RetraceError, match="poly"):
+        guard.assert_ok()
+    assert guard.violations()
+
+
+def test_compile_guard_skips_eager_fns():
+    guard = sanitize.CompileGuard("seed")
+    guard.register("eager", lambda x: x, bound=1)
+    guard.register("none", None, bound=1)
+    assert guard.entry_points == []
+    guard.assert_ok()                          # nothing registered, clean
+
+
+def test_engine_carries_guard_with_documented_bounds():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.serve import Request, ServingEngine
+
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, n_slots=2, max_len=64,
+                           admission="prefill")
+    bounds = engine.compilation_bounds()
+    assert bounds["decode"] == 1 and bounds["chunk"] == 1
+    assert bounds["prefill"] == -(-64 // engine.seq_bucket)
+    assert engine.compile_guard.bounds()["decode"] == 1
+    # churn two waves of different bucketed lengths through it
+    for i, n in enumerate((3, 20, 5, 33)):
+        engine.submit(Request(uid=i, prompt=[2 + i] * n, max_new_tokens=3))
+    engine.run()
+    counts = engine.compile_guard.counts()
+    assert counts["decode"] == 1
+    assert 1 <= counts["prefill"] <= bounds["prefill"]
+    engine.compile_guard.assert_ok()

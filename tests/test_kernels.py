@@ -9,7 +9,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import QuantaAdapter, pair_schedule
+from repro.core import QuantaAdapter
 from repro.kernels import (
     quanta_apply_fused,
     quanta_apply_ref,

@@ -1,7 +1,6 @@
 """Launch-layer tests: sharding rules validity for every arch, HLO cost
 parser, roofline math, and a subprocess mini dry-run on 8 host devices."""
 
-import json
 import math
 import os
 import subprocess
@@ -9,23 +8,20 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCH_IDS, get_config, get_peft
+from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import DECODE_32K, TRAIN_4K
-from repro.launch.hlo_cost import hlo_cost, parse_hlo_computations
+from repro.launch.hlo_cost import hlo_cost
 from repro.launch.mesh import make_abstract_mesh
 from repro.launch.roofline import (
     active_param_count,
-    model_flops,
     parse_collective_bytes,
     roofline_terms,
 )
 from repro.launch.shardings import param_shardings, cache_shardings
-from repro.models import build_model, cache_specs, param_specs
+from repro.models import cache_specs, param_specs
 
 
 def _abstract_mesh(multi=False):

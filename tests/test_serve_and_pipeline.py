@@ -7,7 +7,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke
@@ -73,7 +72,9 @@ def test_admission_paths_equivalent(arch):
                                   "mamba2-1.3b"])
 def test_prefill_admission_is_o1_dispatches(arch):
     """A prefill wave admits in ONE jitted call regardless of prompt length
-    (replay admission needs max_prompt_len decode dispatches)."""
+    (replay admission needs max_prompt_len decode dispatches).  Asserted
+    through the sanitizer's compile guard: each entry point's actual
+    compile count stays within its documented bound."""
     cfg = get_smoke(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -84,6 +85,35 @@ def test_prefill_admission_is_o1_dispatches(arch):
     engine.step()
     assert engine.stats["prefill_calls"] == 1
     assert engine.stats["decode_calls"] == 1   # the tick's fused decode
+    counts = engine.compile_guard.counts()
+    assert counts["prefill"] == 1              # one compile for the wave
+    assert counts["decode"] == 1               # the single fused decode
+    engine.compile_guard.assert_ok()
+
+
+def test_paged_decode_compile_guard():
+    """Paged-path O(1) compilation: slot churn, block-table growth, and
+    preemption-free decode across many ticks never retrace — the guard's
+    documented bounds hold with the actual jit cache sizes."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, n_slots=2, max_len=64,
+                           admission="prefill", cache="paged",
+                           block_size=8, n_blocks=32)
+    # churn: mixed prompt lengths, more requests than slots, enough new
+    # tokens that slots cross block boundaries (alloc-on-append)
+    prompts = [[5, 9, 13], [7] * 21, [40, 2], [9] * 11, [1], [3, 3, 3]]
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=10)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert all(r.done for r in reqs)
+    counts = engine.compile_guard.counts()
+    assert counts["decode"] == 1               # block tables are traced args
+    assert counts["prefill"] <= engine.compilation_bounds()["prefill"]
+    engine.compile_guard.assert_ok()
 
 
 def test_engine_eos_and_backfill():

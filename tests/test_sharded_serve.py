@@ -216,7 +216,9 @@ def test_sharded_adapter_bank_matches_single_device():
 def test_sharded_prefill_admission_is_o1_dispatches():
     """O(1) jitted dispatch per admitted wave must survive the mesh: one
     prefill call and the tick's one fused decode, regardless of prompt
-    length (the jitted insert scatter is not a model dispatch)."""
+    length.  Asserted through the sanitizer's compile guard — under a
+    mesh the insert scatter is jitted too, so all four entry points are
+    held to their documented compilation bounds."""
     cfg = get_smoke("qwen2-0.5b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -227,6 +229,37 @@ def test_sharded_prefill_admission_is_o1_dispatches():
     engine.step()
     assert engine.stats["prefill_calls"] == 1
     assert engine.stats["decode_calls"] == 1
+    counts = engine.compile_guard.counts()
+    assert counts["prefill"] == 1
+    assert counts["decode"] == 1
+    # mesh-only: the jitted insert scatter is guarded as well
+    assert "insert" in counts and counts["insert"] >= 1
+    engine.compile_guard.assert_ok()
+
+
+@multidevice
+def test_sharded_paged_decode_compile_guard():
+    """Mesh + paged cache: slot churn and block growth across shard-local
+    arenas never retrace the fused decode — the compile guard's bounds
+    hold on every jitted entry point (decode, prefill, insert)."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, n_slots=4, max_len=64,
+                           admission="prefill", mesh=_mesh(),
+                           cache="paged", block_size=8)
+    prompts = [[5, 9, 13], [7] * 21, [40, 2], [9] * 11, [1], [3, 3, 3]]
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert all(r.done for r in reqs)
+    # one real compile + the first tick's placement-signature entry
+    # (see ServingEngine.compilation_bounds mesh slack)
+    assert engine.compile_guard.counts()["decode"] \
+        <= engine.compilation_bounds()["decode"]
+    engine.compile_guard.assert_ok()
 
 
 @multidevice
@@ -336,8 +369,8 @@ def test_peft_shardings_bank_axis_rules():
     }
     assert group_specs == {P(None, ("data",), None, None)}
     assert all(
-        l.shape[1] == 1 + bank3.num_tenants
-        for l in jax.tree_util.tree_leaves(path.groups)
+        leaf.shape[1] == 1 + bank3.num_tenants
+        for leaf in jax.tree_util.tree_leaves(path.groups)
     )
     for s in sh_path.id_maps:
         assert s.spec == P()

@@ -1,7 +1,6 @@
 """End-to-end behaviour: fine-tune a small model with QuanTA, checkpoint,
 restore, merge, serve — the full paper workflow on CPU."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,6 @@ from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_smoke
 from repro.core.peft import PeftConfig, attach, merge_all, trainable_fraction
 from repro.data import SyntheticSeq2Task
-from repro.launch.steps import default_optimizer
 from repro.models import build_model
 from repro.train import TrainState, make_train_step
 

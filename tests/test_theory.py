@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    QuantaAdapter,
     init_tensors,
     materialize,
     operator_rank,
@@ -118,7 +117,6 @@ def test_low_vs_high_rank_update_similarity_contrast():
     d = 48
     u = jax.random.normal(key, (d, 4))
     low1 = u @ jax.random.normal(jax.random.PRNGKey(1), (4, d))
-    low2 = u @ jax.random.normal(jax.random.PRNGKey(2), (4, d))
     high1 = jax.random.normal(jax.random.PRNGKey(3), (d, d))
     high2 = jax.random.normal(jax.random.PRNGKey(4), (d, d))
     g_low = similarity_grid(low1 + 0.05 * high1, low1 + 0.05 * high2, 16, 16)
