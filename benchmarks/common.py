@@ -127,10 +127,39 @@ def _perturb(kind: str, tensors, key, strength: float):
     return tuple(out)
 
 
-def make_task(kind: str, seed: int = 0, strength: float = 0.1) -> TeacherTask:
-    """Build the frozen base + planted-rank teacher."""
+def fake_quantize(params, fmt: str):
+    """Round every quantizable projection through the blockwise format
+    (quantize -> dequantize, dense fp out).  The result is exactly
+    representable: re-quantizing reproduces the same codes bit for bit
+    (the per-block absmax element maps to the extremal code, so the scale
+    — and hence every code — survives the round trip)."""
+    from repro.core.quantize import QuantizedLinear, dequantize, \
+        quantize_params
+
+    return jax.tree_util.tree_map(
+        lambda leaf: dequantize(leaf)
+        if isinstance(leaf, QuantizedLinear) else leaf,
+        quantize_params(params, fmt),
+        is_leaf=lambda leaf: isinstance(leaf, QuantizedLinear),
+    )
+
+
+def make_task(kind: str, seed: int = 0, strength: float = 0.1,
+              base_quant: Optional[str] = None) -> TeacherTask:
+    """Build the frozen base + planted-rank teacher.
+
+    ``base_quant`` plants the teacher on a fake-quantized base (see
+    :func:`fake_quantize`): the quantized-base fine-tuning gate then
+    measures ADAPTATION quality on the base the student actually serves,
+    not the (toy-scale-dominated) zero-shot degradation of the format —
+    on this d=64 proxy nf4's ~9% weight error swamps the strength-0.1
+    planted delta, which no adapter on the paper's q/v targets could
+    recover; at paper scale that gap is the (separately benchmarked)
+    quantization quality loss, not a fine-tuning property."""
     model = build_model(BENCH_CFG)
     base = model.init(jax.random.PRNGKey(17))
+    if base_quant is not None:
+        base = fake_quantize(base, base_quant)
     pc = PeftConfig(method="quanta", scheme=None, n_axes=3)
     _, peft0 = attach(jax.random.PRNGKey(ATTACH_SEED + 1), base, pc)
     teacher = jax.tree_util.tree_map(lambda x: x, base)
@@ -188,17 +217,43 @@ def finetune(
     lr: float = 5e-3,
     seed: int = ATTACH_SEED,
     keep_state: bool = False,
+    base_quant: Optional[str] = None,
     **peft_kw,
 ) -> RunResult:
     model = task.model
     params = task.base_params
     full_ft = method == "ft"
     if full_ft:
+        if base_quant is not None:
+            raise ValueError("base_quant freezes the base; incompatible "
+                             "with full fine-tuning")
         base, peft = params, {}
         lr = lr / 5  # FT uses a smaller lr (paper: 1e-5 vs 1e-4)
     else:
         pc = PeftConfig(method=method, scheme=None, **peft_kw)
         base, peft = attach(jax.random.PRNGKey(seed + 1), params, pc)
+        if base_quant is not None:
+            # QLoRA-style: quantize AFTER attach (QuanTA's attach folds
+            # the frozen copy into the base, which needs fp arithmetic);
+            # the adapter then trains against the quantized frozen base.
+            from repro.core.peft import _set_path, flatten_paths
+            from repro.core.quantize import quantize_params
+
+            flat_fp = flatten_paths(base)
+            base = quantize_params(base, base_quant)
+            if method == "quanta":
+                # the folded weight W0' = W0 - S is not representable in
+                # the blockwise format (S is full-scale), and serving
+                # carries QuanTA folded bases DENSE anyway
+                # (core.adapters.RebasedAdapter's explicit memory trade) —
+                # so training mirrors deployment: only the un-adapted
+                # projections are quantized.
+                restored: dict = {}
+                for path, leaf in flatten_paths(base).items():
+                    _set_path(restored, path,
+                              flat_fp[path] if path in
+                              {s.path for s in peft.specs} else leaf)
+                base = restored
     opt = AdamW(lr=lr)
     state = TrainState.create(base, peft, opt, full_ft=full_ft)
     step_fn = jax.jit(make_train_step(DistillLoss(model), opt,

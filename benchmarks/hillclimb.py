@@ -66,6 +66,11 @@ VARIANTS = {
          dict(decode_shardings=True,
               cfg_overrides={"attn_backend": "pallas",
                              "kv_cache": "paged"})),
+        ("B6_nf4_decode", "minicpm-2b", "decode_32k",
+         dict(decode_shardings=True,
+              cfg_overrides={"attn_backend": "pallas",
+                             "kv_cache": "paged",
+                             "base_quant": "nf4"})),
     ],
     "C": [
         ("C0_baseline", "mixtral-8x7b", "train_4k", {}),

@@ -16,6 +16,11 @@ compiles):
   gauges (``peak bytes allocated``, ``peak blocks``, peak utilization)
   next to the dense stripes' constant footprint, and outputs are asserted
   token-for-token identical to dense,
+* **quantized frozen base** (``base_quant="nf4"``) — the same dense and
+  paged engines over the blockwise-NF4 base served through the fused
+  dequant-matmul path: rows report tokens/sec plus the per-host
+  ``param_bytes`` gauge next to the fp engine's, and the two quantized
+  engines are asserted token-for-token identical,
 * **sharded engine** (``--sharded``) — the same dense/paged engines on a
   2x`data` . 4x`model` mesh over 8 virtual CPU devices
   (``ServingEngine(mesh=...)``): rows report per-host cache bytes and
@@ -39,12 +44,14 @@ compiles):
 CSV rows via ``benchmarks.common.csv_row``:
 ``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``,
 ``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``,
+``serve_quant_<family>_nf4_<dense|paged>, ...``,
 ``serve_adapters_<family>_<single|pallas|bank8|merged>, ...`` and
 ``serve_sharded_<family>_<dense|paged>, ...``.
 
 ``--smoke`` (CI gate) runs the transformer family only, with the paged
-vs dense, multi-adapter (bank8 / pallas / merged vs single), and — with
-``--sharded`` — sharded vs single-device equivalence assertions intact.
+vs dense, quantized-base (nf4 dense vs paged), multi-adapter (bank8 /
+pallas / merged vs single), and — with ``--sharded`` — sharded vs
+single-device equivalence assertions intact.
 """
 
 from __future__ import annotations
@@ -145,6 +152,7 @@ def bench_family(family: str, arch: str, sharded: bool = False):
         ))
     cache_rows, dense_outs = bench_cache_modes(family, model, params)
     rows.extend(cache_rows)
+    rows.extend(bench_quantized_base(family, model, params))
     rows.extend(bench_adapter_modes(family, arch, cfg, model, params))
     if sharded:
         rows.extend(bench_sharded(family, model, params, dense_outs))
@@ -181,6 +189,39 @@ def bench_cache_modes(family: str, model, params):
         f"{family}: paged cache diverged from dense"
     )
     return rows, outs["dense"]
+
+
+def bench_quantized_base(family: str, model, params):
+    """fp vs blockwise-NF4 frozen base under prefill admission: tokens/sec
+    plus the per-host ``param_bytes`` gauge next to the fp engine's, with
+    a dense-vs-paged token-for-token equivalence assert on the quantized
+    engine (the quantized-base CI gate)."""
+    fp_bytes = ServingEngine(
+        model, params, n_slots=N_SLOTS, max_len=MAX_LEN
+    ).stats["param_bytes"]
+    rows, outs = [], {}
+    for mode in ("dense", "paged"):
+        engine = ServingEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            admission="prefill", cache=mode, block_size=BLOCK_SIZE,
+            base_quant="nf4",
+        )
+        _run_wave(engine, _prompts(N_SLOTS, seed=1))          # warmup/compile
+        admit_s, _calls, toks, total_s, outs[mode] = _run_wave(
+            engine, _prompts(N_SLOTS, seed=2), uid0=100
+        )
+        s = engine.stats
+        rows.append(csv_row(
+            f"serve_quant_{family}_nf4_{mode}",
+            admit_s * 1e6,
+            f"toks/s={toks / total_s:.0f} param_bytes={s['param_bytes']} "
+            f"fp_param_bytes={fp_bytes} "
+            f"cut={fp_bytes / max(s['param_bytes'], 1):.2f}x",
+        ))
+    assert outs["paged"] == outs["dense"], (
+        f"{family}: quantized paged cache diverged from dense"
+    )
+    return rows
 
 
 def bench_adapter_modes(family: str, arch: str, cfg, model, params):

@@ -516,3 +516,41 @@ def _build_quanta_linear():
         ("qwen2_d896", run(256, 896, (16, 8, 7), 128, 448)),
         ("d512_cols256", run(128, 512, (8, 8, 8), 128, 256)),
     ])
+
+
+# operands: x (0), packed codes (uint8/int8), per-block scales, then the
+# nf4 codebook / normalizers — outputs match x, accumulation is fp32
+# inside the dot (no scratch: one grid step owns its full output block)
+@register_kernel("quantized_matmul")
+def _build_quantized_matmul():
+    from repro.core.quantize import quantize_linear
+    from repro.kernels.quantized_matmul import quantized_matmul
+
+    def run(rows, d_in, d_out, fmt, block_size, block_rows, block_cols,
+            normalize=None, dtype=jnp.bfloat16):
+        w = jnp.asarray(
+            np.linspace(-1, 1, d_in * d_out, dtype=np.float32).reshape(
+                d_in, d_out
+            )
+        )
+        qw = quantize_linear(w, fmt, block_size=block_size,
+                             normalize=normalize)
+        x = jnp.zeros((rows, d_in), dtype)
+        return lambda: quantized_matmul(
+            x, qw, block_rows=block_rows, block_cols=block_cols,
+            interpret=True,
+        )
+
+    return _capture_cases([
+        # qwen2 hidden at the default nf4 blocking; grid (2, 2)
+        ("nf4_d896", run(256, 896, 896, "nf4", 64, 128, 448)),
+        # block-remainder everywhere: 100 rows pad to 128, d_in=200 leaves
+        # a ragged final scale block (200 % 64 != 0), d_out=136 under-fills
+        # the column block
+        ("int8_remainder", run(100, 200, 136, "int8", 64, 128, 512,
+                               dtype=jnp.float32)),
+        # column padding path (640 % 512 != 0 -> packed/scales zero-pad)
+        # with row/col normalizers as extra operands
+        ("nf4_colpad_norms", run(64, 256, 640, "nf4", 64, 64, 512,
+                                 normalize="rowcol")),
+    ])

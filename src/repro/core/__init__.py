@@ -22,6 +22,14 @@ from repro.core.quanta import (
     tensor_shapes,
 )
 from repro.core.adapters import Adapter, RebasedAdapter
+from repro.core.quantize import (
+    QuantizedLinear,
+    base_matmul,
+    dequantize,
+    ensure_dense,
+    quantize_linear,
+    quantize_params,
+)
 from repro.core.baselines import (
     BottleneckAdapter,
     DoraAdapter,

@@ -49,6 +49,8 @@ from typing import Any, ClassVar
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import base_matmul
+
 __all__ = ["Adapter", "RebasedAdapter"]
 
 
@@ -74,9 +76,15 @@ class Adapter:
     # --- derived protocol methods ---------------------------------------
     def apply(self, x: jnp.ndarray, w: jnp.ndarray,
               backend: str = "reference") -> jnp.ndarray:
-        """Adapted linear ``y = x @ w + delta(x)`` (delta-form default)."""
-        del backend  # no fused kernel for the generic path
-        return x @ w + self.delta(x)
+        """Adapted linear ``y = x @ w + delta(x)`` (delta-form default).
+
+        ``w`` may be a blockwise-quantized frozen base
+        (``core.quantize.QuantizedLinear``): ``base_matmul`` runs the
+        dequant-matmul (fused under ``backend="pallas"``) and the fp
+        adapter delta lands on top — the same composition contract as
+        ``quanta_linear_fused``.  Dense weights keep the exact ``x @ w``.
+        """
+        return base_matmul(x, w, backend) + self.delta(x)
 
     def merge(self, w: jnp.ndarray) -> jnp.ndarray:
         """Fold the trained update into the base weight (paper §6)."""

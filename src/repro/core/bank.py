@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core.adapters import Adapter, RebasedAdapter
 from repro.core.peft import AdapterSet, _set_path, flatten_paths
+from repro.core.quantize import base_matmul
 
 __all__ = ["AdapterBank", "BankedAdapter"]
 
@@ -100,8 +101,10 @@ class BankedAdapter(Adapter):
 
     def apply(self, x: jnp.ndarray, w: jnp.ndarray,
               backend: str = "reference") -> jnp.ndarray:
-        del backend  # gathered per-row application runs the reference path
-        y = x @ w
+        # the shared-base matmul honors the backend (and a quantized base
+        # dispatches bitwise-identically either way); the gathered per-row
+        # adapter application below always runs the reference path
+        y = base_matmul(x, w, backend)
         for g, lid, dform in zip(self.groups, self.ids, self.delta_forms):
             sel = jax.tree_util.tree_map(
                 lambda leaf: jnp.take(leaf, lid, axis=0), g

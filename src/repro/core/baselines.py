@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adapters import Adapter
+from repro.core.quantize import ensure_dense
 
 __all__ = [
     "LoraAdapter",
@@ -109,6 +110,9 @@ class DoraAdapter(Adapter):
         return self.a.size + self.b.size + self.m.size
 
     def adapted_weight(self, w0: jnp.ndarray) -> jnp.ndarray:
+        # weight-coupled: a quantized frozen base must be materialized
+        # (the column-norm rescale reads the whole matrix)
+        w0 = ensure_dense(w0)
         w = w0.astype(self.a.dtype) + (self.alpha / self.a.shape[1]) * (
             self.a @ self.b
         )
@@ -128,6 +132,7 @@ class DoraAdapter(Adapter):
     def neutral(self, w0: jnp.ndarray) -> "DoraAdapter":
         """No-op DoRA for ``w0``: zero low-rank factors, ``m`` = column
         norms of ``w0`` (the all-zeros pytree would rescale ``w0`` to 0)."""
+        w0 = ensure_dense(w0)
         return DoraAdapter(
             jnp.zeros_like(self.a), jnp.zeros_like(self.b),
             jnp.linalg.norm(w0.astype(self.a.dtype), axis=0), self.alpha,

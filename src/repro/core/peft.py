@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro.core import quanta as Q
 from repro.core.baselines import DoraAdapter, KronaAdapter, LoraAdapter
 from repro.core.factorize import factorize, parse_scheme
+from repro.core.quantize import base_matmul
 
 __all__ = [
     "PeftConfig",
@@ -364,9 +365,15 @@ def peft_linear(
     application (delta form, DoRA's weight rescaling, the bank's gathered
     per-request form, ...).  ``backend`` is the model's
     ``cfg.peft_backend``; adapters without a fused kernel ignore it.
+
+    ``w`` may be a blockwise-quantized frozen base
+    (``core.quantize.QuantizedLinear``) — ``base_matmul`` and every
+    adapter's ``apply`` run the dequant-matmul (fused under
+    ``backend="pallas"``) with the fp adapter update on top; dense
+    weights keep the exact ``x @ w`` the models always ran.
     """
     if adapter is None:
-        y = x @ w
+        y = base_matmul(x, w, backend)
     else:
         y = adapter.apply(x, w, backend)
     if bias is not None:

@@ -392,12 +392,23 @@ class QuantaAdapter(Adapter):
         Forward-only today: training keeps ``backend="reference"`` (the
         raw kernels carry no custom VJP).
         """
+        # deferred import: kernels.ops imports QuantaAdapter from here
+        from repro.core.quantize import QuantizedLinear, base_matmul
+
         if backend == "pallas" and w.ndim == 2:
-            # deferred import: kernels.ops imports QuantaAdapter from here
+            if isinstance(w, QuantizedLinear):
+                # quantized frozen base: fused dequant-matmul for the
+                # base + the fused chain kernel for the delta (the dense
+                # weight is never materialized in HBM)
+                from repro.kernels.ops import quanta_apply_fused
+
+                return base_matmul(x, w, backend) + quanta_apply_fused(
+                    x, self
+                ).astype(x.dtype)
             from repro.kernels.ops import quanta_linear_fused
 
             return quanta_linear_fused(x, w, self)
-        return x @ w + self.delta(x)
+        return base_matmul(x, w, backend) + self.delta(x)
 
     def merge(self, w: jnp.ndarray) -> jnp.ndarray:
         """Merge the trained operator into the (folded) base weight

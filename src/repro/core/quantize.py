@@ -1,0 +1,430 @@
+"""Blockwise frozen-base weight quantization (NF4 / int8) for serving.
+
+Decode is bandwidth-bound (ROADMAP §Perf log B4/B5): after paging cut the
+KV bytes, the frozen base's weight stream is the dominant HBM term per
+decode tick.  QuanTA's core selling point — adaptation that leaves the
+base *frozen* — composes directly with a quantized base, the standard
+production PEFT deployment (the QLoRA pattern: 4-bit frozen weights +
+full-precision adapters).  This module provides:
+
+* :class:`QuantizedLinear` — the packed storage format for one frozen
+  linear weight: blockwise NF4 (4-bit normal-float codebook, two codes
+  per byte) or int8, per-block fp16/fp32 absmax scales along ``d_in``,
+  and optional NoWag-style row/column normalizers.  A registered
+  dataclass pytree, so it stacks along a leading layer axis and slices
+  under ``jax.lax.scan`` exactly like the dense ``(L, d_in, d_out)``
+  weights it replaces.
+* :func:`quantize_linear` / :func:`dequantize` — the lossy encode and
+  the exact decode.  ``dequant_values`` is THE single elementwise
+  dequantization both the reference matmul and the Pallas kernel tile
+  use — the kernel's bitwise-equality gate (tests/test_quantize.py)
+  only holds because there is one implementation to agree with.
+* :func:`quantize_params` — quantize every projection leaf a model
+  applies through ``peft_linear`` (``QUANT_TARGETS``); embeddings, the
+  LM head, norms, biases, convs, and raw-matmul projections (Mamba2's
+  ``bc_proj``/``dt_proj``, Griffin's ``w_a``/``w_x``) stay dense.
+* :func:`base_matmul` — the base-weight matmul every adapter ``apply``
+  routes through: plain arrays keep the exact ``x @ w`` the models
+  always ran; ``QuantizedLinear`` dispatches to the fused dequant-matmul
+  kernel (``backend="pallas"``) or the dequantize-then-matmul reference.
+* blockwise scale/round helpers shared with the int8 gradient
+  compressor (``optim.compress``) — one scale/round implementation for
+  both wire-format gradients and frozen weights.
+
+Quantization itself is lossy; everything downstream of the stored codes
+is exact: kernel == reference bitwise, and the quantized base + fp
+adapter composition is the same contract as ``quanta_linear_fused``
+(adapter delta applied on top of the base matmul).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NF4_CODEBOOK",
+    "QUANT_TARGETS",
+    "QuantizedLinear",
+    "base_matmul",
+    "blockwise_absmax",
+    "blockwise_round",
+    "blockwise_scales",
+    "dequant_values",
+    "dequantize",
+    "ensure_dense",
+    "expand_scales",
+    "matmul_ref",
+    "quantize_linear",
+    "quantize_params",
+    "quantized_nbytes",
+]
+
+# The 16-level NF4 codebook (QLoRA, Dettmers et al. 2023): quantiles of a
+# standard normal rescaled to span exactly [-1, 1], with 0.0 exactly
+# representable (code 7).  Block absmax scaling maps each weight block
+# into this range.
+NF4_CODEBOOK = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367,
+        -0.39491748809814453, -0.28444138169288635, -0.18477343022823334,
+        -0.09105003625154495, 0.0, 0.07958029955625534,
+        0.16093020141124725, 0.24611230194568634, 0.33791524171829224,
+        0.44070982933044434, 0.5626170039176941, 0.7229568362236023, 1.0,
+    ],
+    np.float32,
+)
+# Decision boundaries for nearest-code assignment: midpoints between
+# adjacent codebook entries.
+_NF4_BOUNDS = (NF4_CODEBOOK[:-1] + NF4_CODEBOOK[1:]) / 2.0
+
+# Projection leaves applied through peft_linear/base_matmul in all three
+# model families (transformer/griffin/mamba2).  NOT quantizable: embed /
+# lm_head (gather + transpose-reuse), norms/biases/convs, MoE expert
+# stacks (ndim 4, applied via einsum), and the raw-matmul projections
+# (mamba2 bc_proj/dt_proj, griffin w_a/w_x).
+QUANT_TARGETS = (
+    "q_proj", "k_proj", "v_proj", "o_proj",
+    "gate_proj", "up_proj", "down_proj",
+    "rec_proj", "z_proj", "x_proj", "out_proj",
+)
+
+
+# ---------------------------------------------------------------------------
+# Shared blockwise scale/round helpers (also used by optim.compress)
+# ---------------------------------------------------------------------------
+
+def _norm_axis(ndim: int, axis: int) -> int:
+    return axis % ndim
+
+
+def blockwise_absmax(x: jnp.ndarray, block_size: Optional[int],
+                     axis: int = 0) -> jnp.ndarray:
+    """Per-block absmax along ``axis``.
+
+    ``block_size=None`` treats the whole axis as one block (the
+    per-tensor case, after flattening).  A remainder block (axis extent
+    not divisible by ``block_size``) is zero-padded — absmax is
+    unaffected and the pad rows are never dequantized.
+    """
+    axis = _norm_axis(x.ndim, axis)
+    n = x.shape[axis]
+    bs = n if block_size is None else block_size
+    nb = -(-n // bs)
+    pad = nb * bs - n
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    shp = x.shape
+    x = x.reshape(shp[:axis] + (nb, bs) + shp[axis + 1:])
+    return jnp.max(jnp.abs(x), axis=axis + 1)
+
+
+def blockwise_scales(x: jnp.ndarray, block_size: Optional[int],
+                     axis: int = 0, levels: float = 127.0,
+                     eps: float = 1e-12) -> jnp.ndarray:
+    """Per-block positive scales: ``max(absmax, eps) / levels``.
+
+    ``levels=127`` for symmetric int8, ``levels=1`` for codebooks that
+    span ``[-1, 1]`` (NF4).  The eps clamp keeps all-zero blocks from
+    producing a 0 (or NaN-generating) scale — scale positivity is a
+    pinned property (tests/test_quantize.py).
+    """
+    return jnp.maximum(blockwise_absmax(x, block_size, axis), eps) / levels
+
+
+def expand_scales(scales: jnp.ndarray, block_size: int, n: int,
+                  axis: int = 0) -> jnp.ndarray:
+    """Broadcast per-block scales back to ``n`` per-element rows along
+    ``axis`` (remainder block: the repeat overshoots, then slices)."""
+    axis = _norm_axis(scales.ndim, axis)
+    s = jnp.repeat(scales, block_size, axis=axis)
+    return jax.lax.slice_in_dim(s, 0, n, axis=axis)
+
+
+def blockwise_round(x: jnp.ndarray, scales: jnp.ndarray, block_size: int,
+                    axis: int = 0, levels: int = 127) -> jnp.ndarray:
+    """Symmetric round-to-nearest against expanded per-block scales:
+    ``clip(round(x / scale), -levels, levels)`` — the one rounding rule
+    shared by gradient compression and int8 weight quantization."""
+    axis = _norm_axis(x.ndim, axis)
+    s = expand_scales(scales, block_size, x.shape[axis], axis)
+    return jnp.clip(jnp.round(x / s), -levels, levels)
+
+
+# ---------------------------------------------------------------------------
+# The packed weight format
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    """One frozen linear weight in blockwise-quantized storage.
+
+    Array children (stack/scan/vmap along a leading layer axis like the
+    dense weight they replace):
+
+    * ``packed`` — NF4: ``uint8 (..., d_in//2, d_out)``, two 4-bit codes
+      per byte along ``d_in`` (high nibble = even row, low = odd row);
+      int8: ``int8 (..., d_in, d_out)``.
+    * ``scales`` — ``(..., ceil(d_in/block_size), d_out)`` per-block
+      absmax scales (fp32 or fp16).
+    * ``row_norm`` / ``col_norm`` — optional ``(..., d_in)`` /
+      ``(..., d_out)`` NoWag-style normalizers divided out before
+      blockwise quantization and multiplied back at dequant (``None``
+      children are skipped by every pytree transform).
+
+    Static fields: ``fmt`` ("nf4" | "int8"), ``block_size``, and the
+    original weight's dtype name (what ``dequantize`` restores and what
+    ``.shape``/``.ndim`` describe).
+    """
+
+    packed: jnp.ndarray
+    scales: jnp.ndarray
+    fmt: str = dataclasses.field(metadata=dict(static=True))
+    block_size: int = dataclasses.field(metadata=dict(static=True))
+    dtype: str = dataclasses.field(metadata=dict(static=True))
+    row_norm: Optional[jnp.ndarray] = None
+    col_norm: Optional[jnp.ndarray] = None
+
+    @property
+    def d_in(self) -> int:
+        return self.packed.shape[-2] * (2 if self.fmt == "nf4" else 1)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.packed.shape[:-2] + (self.d_in, self.packed.shape[-1])
+
+    @property
+    def ndim(self) -> int:
+        return self.packed.ndim
+
+
+def quantized_nbytes(qw: QuantizedLinear) -> int:
+    """Stored bytes of one quantized weight (packed + scales + norms)."""
+    return sum(
+        int(leaf.size * jnp.dtype(leaf.dtype).itemsize)
+        for leaf in jax.tree_util.tree_leaves(qw)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Encode (lossy) / decode (exact)
+# ---------------------------------------------------------------------------
+
+def quantize_linear(
+    w: jnp.ndarray,
+    fmt: str = "nf4",
+    *,
+    block_size: int = 64,
+    normalize: Optional[str] = None,
+    scale_dtype: Any = jnp.float32,
+) -> QuantizedLinear:
+    """Blockwise-quantize a ``(d_in, d_out)`` (or layer-stacked
+    ``(L, d_in, d_out)``) weight.  Blocks run along ``d_in`` — the
+    contraction axis — so a column tile of the matmul only ever needs
+    its own columns' scales.  ``normalize`` in {None, "row", "col",
+    "rowcol"} divides out RMS row/column normalizers first.
+    """
+    if w.ndim not in (2, 3):
+        raise ValueError(f"expected a 2-D or layer-stacked 3-D weight, "
+                         f"got ndim={w.ndim}")
+    if fmt not in ("nf4", "int8"):
+        raise ValueError(f"unknown quantization format {fmt!r}")
+    if normalize not in (None, "row", "col", "rowcol"):
+        raise ValueError(f"unknown normalize mode {normalize!r}")
+    d_in = w.shape[-2]
+    dtype_name = str(jnp.dtype(w.dtype).name)
+    w32 = jnp.asarray(w, jnp.float32)
+    row_norm = col_norm = None
+    if normalize in ("row", "rowcol"):
+        row_norm = jnp.maximum(
+            jnp.sqrt(jnp.mean(w32 * w32, axis=-1)), 1e-12
+        )
+        w32 = w32 / row_norm[..., :, None]
+    if normalize in ("col", "rowcol"):
+        col_norm = jnp.maximum(
+            jnp.sqrt(jnp.mean(w32 * w32, axis=-2)), 1e-12
+        )
+        w32 = w32 / col_norm[..., None, :]
+
+    if fmt == "nf4":
+        if d_in % 2:
+            raise ValueError(
+                f"NF4 packs two codes per byte along d_in; d_in={d_in} "
+                "must be even"
+            )
+        scales = blockwise_scales(w32, block_size, axis=-2, levels=1.0)
+        v = w32 / expand_scales(scales, block_size, d_in, axis=-2)
+        codes = jnp.searchsorted(
+            jnp.asarray(_NF4_BOUNDS), jnp.clip(v, -1.0, 1.0), side="right"
+        ).astype(jnp.uint8)
+        even = codes[..., 0::2, :]
+        odd = codes[..., 1::2, :]
+        packed = ((even << 4) | odd).astype(jnp.uint8)
+    else:
+        scales = blockwise_scales(w32, block_size, axis=-2, levels=127.0)
+        packed = blockwise_round(
+            w32, scales, block_size, axis=-2, levels=127
+        ).astype(jnp.int8)
+    return QuantizedLinear(
+        packed=packed, scales=scales.astype(scale_dtype), fmt=fmt,
+        block_size=block_size, dtype=dtype_name,
+        row_norm=row_norm, col_norm=col_norm,
+    )
+
+
+def dequant_values(
+    packed: jnp.ndarray,
+    scales: jnp.ndarray,
+    row_norm: Optional[jnp.ndarray],
+    col_norm: Optional[jnp.ndarray],
+    *,
+    fmt: str,
+    block_size: int,
+    d_in: int,
+    codebook: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Elementwise fp32 dequantization of (a tile of) a quantized weight.
+
+    THE single implementation shared by the reference matmul and the
+    Pallas kernel body (``kernels.quantized_matmul``): the kernel's
+    bitwise-equality gate holds because a column tile of this function
+    equals this function of the column tile — every op here is
+    elementwise or a row-block broadcast along the un-tiled ``d_in``
+    axis, which the kernel never splits.
+
+    ``codebook`` defaults to :data:`NF4_CODEBOOK`; the Pallas kernel
+    passes its VMEM-resident copy (a kernel body cannot capture host
+    constants) holding the exact same 16 values.
+    """
+    if fmt == "nf4":
+        hi = (packed >> 4).astype(jnp.int32)
+        lo = (packed & 0xF).astype(jnp.int32)
+        # interleave: row 2k from the high nibble, row 2k+1 from the low
+        codes = jnp.stack([hi, lo], axis=-2).reshape(
+            packed.shape[:-2] + (d_in, packed.shape[-1])
+        )
+        if codebook is None:
+            codebook = jnp.asarray(NF4_CODEBOOK)
+        vals = codebook[codes]
+    elif fmt == "int8":
+        vals = packed.astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown quantization format {fmt!r}")
+    s = expand_scales(
+        scales.astype(jnp.float32), block_size, d_in, axis=-2
+    )
+    w = vals * s
+    if row_norm is not None:
+        w = w * row_norm.astype(jnp.float32)[..., :, None]
+    if col_norm is not None:
+        w = w * col_norm.astype(jnp.float32)[..., None, :]
+    return w
+
+
+def dequantize(qw: QuantizedLinear, dtype: Any = None) -> jnp.ndarray:
+    """Materialize the full dense weight (fp32 internally, cast to the
+    stored dtype by default)."""
+    w = dequant_values(
+        qw.packed, qw.scales, qw.row_norm, qw.col_norm,
+        fmt=qw.fmt, block_size=qw.block_size, d_in=qw.d_in,
+    )
+    return w.astype(qw.dtype if dtype is None else dtype)
+
+
+def ensure_dense(w, dtype: Any = None):
+    """Dense view of a maybe-quantized weight: pass-through for arrays,
+    :func:`dequantize` for :class:`QuantizedLinear` (weight-coupled
+    adapters like DoRA need the dense matrix)."""
+    if isinstance(w, QuantizedLinear):
+        return dequantize(w, dtype)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# The base matmul every adapter apply routes through
+# ---------------------------------------------------------------------------
+
+def matmul_ref(x: jnp.ndarray, qw: QuantizedLinear) -> jnp.ndarray:
+    """Dequantize-then-matmul reference: fp32 dequant, cast to the
+    activation dtype, one monolithic dot with fp32 accumulation.
+
+    This is the numerics contract the Pallas kernel is gated against
+    bitwise — the kernel wrapper falls back to this exact function when
+    a tile would overflow the VMEM budget, so dispatch never changes
+    results.
+    """
+    if qw.ndim != 2:
+        raise ValueError(f"matmul_ref needs a 2-D weight, got {qw.shape}")
+    w = dequantize(qw, jnp.float32).astype(x.dtype)
+    batch = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    out = jax.lax.dot_general(
+        xf, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    return out.reshape(*batch, w.shape[-1])
+
+
+def base_matmul(x: jnp.ndarray, w, backend: str = "reference") -> jnp.ndarray:
+    """The frozen-base linear under every adapter: ``x @ w`` verbatim for
+    dense weights (bit-identical to what the models always ran), fused
+    dequant-matmul for :class:`QuantizedLinear` (``backend="pallas"``
+    routes through the Pallas kernel, which the VMEM gate may still fall
+    back to the — bitwise identical — reference)."""
+    if isinstance(w, QuantizedLinear):
+        if backend == "pallas" and w.ndim == 2:
+            # deferred import: kernels.quantized_matmul imports the
+            # dequant helpers from this module
+            from repro.kernels.quantized_matmul import quantized_matmul
+
+            return quantized_matmul(x, w)
+        return matmul_ref(x, w)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree quantization
+# ---------------------------------------------------------------------------
+
+def quantize_params(
+    params: Dict[str, Any],
+    fmt: str,
+    *,
+    block_size: int = 64,
+    targets: Tuple[str, ...] = QUANT_TARGETS,
+    normalize: Optional[str] = None,
+    scale_dtype: Any = jnp.float32,
+) -> Dict[str, Any]:
+    """Quantize every targeted projection leaf of a model's parameter
+    tree; all other leaves (embeddings, LM head, norms, biases, convs,
+    MoE expert stacks) pass through untouched.  Idempotent: already
+    quantized leaves are kept as-is, so an engine can accept
+    pre-quantized params.
+    """
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, dict):
+                out[key] = walk(val)
+            elif isinstance(val, QuantizedLinear):
+                out[key] = val
+            elif key in targets and getattr(val, "ndim", 0) in (2, 3):
+                out[key] = quantize_linear(
+                    val, fmt, block_size=block_size, normalize=normalize,
+                    scale_dtype=scale_dtype,
+                )
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)

@@ -15,4 +15,8 @@ from repro.kernels.flash_attention import (
     visible_block_fraction,
 )
 from repro.kernels.ops import quanta_apply_fused, quanta_linear_fused
+from repro.kernels.quantized_matmul import (
+    quantized_matmul,
+    quantized_matmul_ref,
+)
 from repro.kernels.ref import quanta_apply_ref, quanta_linear_ref

@@ -1,0 +1,220 @@
+"""Fused dequant-matmul Pallas kernel for blockwise-quantized weights.
+
+``y = x @ dequant(Wq)`` with the dense weight never materialized in HBM:
+each grid step loads one activation row-block and one PACKED weight
+column tile (uint8 NF4 codes or int8) plus its per-block scales into
+VMEM, dequantizes the tile there (fp32), and runs the matmul with fp32
+accumulation on the MXU.  The HBM weight stream per decode tick drops
+from ``d_in * d_out * itemsize`` to the quantized bytes (~4x for NF4 of
+bf16) — exactly the dominant decode term ROADMAP §Perf B4/B5 left.
+
+Numerics contract (the CI-gated bitwise equality): the kernel must equal
+``core.quantize.matmul_ref`` — dequantize-then-matmul in the same dtype —
+bit for bit.  This holds by construction:
+
+* the elementwise dequantization is literally the same function
+  (``core.quantize.dequant_values``), applied per column tile, and every
+  op in it is elementwise or a broadcast along the un-split ``d_in``
+  axis, so a tile of the reference's dequant equals the dequant of the
+  tile;
+* the grid tiles rows and output columns but never the contraction
+  axis — each output element is ONE ``dot_general`` over the full
+  ``d_in`` with ``preferred_element_type=f32`` in both paths, and tiled
+  full-K dots are bitwise equal to the monolithic dot (validated on
+  this backend for f32 and bf16, including non-divisible row counts).
+
+The jit'd wrapper pads rows and output columns to the block grid
+(zero-padded weight columns cannot perturb kept columns — each output
+column reads only its own weight column) and dispatches on the shared
+``kernels.vmem.vmem_footprint`` budget, falling back to the — bitwise
+identical — reference when a tile would not fit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import (
+    NF4_CODEBOOK,
+    QuantizedLinear,
+    dequant_values,
+    matmul_ref,
+)
+from repro.kernels.dispatch import resolve_interpret
+from repro.kernels.vmem import VMEM_BUDGET_BYTES, vmem_footprint
+
+__all__ = [
+    "quantized_matmul",
+    "quantized_matmul_kernel_call",
+    "quantized_matmul_ref",
+    "quantized_vmem_ok",
+]
+
+# Re-exported so kernel-vs-reference callers (tests, the analysis
+# registry) name both paths from one module.
+quantized_matmul_ref = matmul_ref
+
+
+def _kernel(x_ref, q_ref, s_ref, *refs, fmt, block_size, d_in,
+            has_row, has_col):
+    i = 0
+    cb = None
+    if fmt == "nf4":
+        cb = refs[i][...].reshape(-1)
+        i += 1
+    row = refs[i][...].reshape(-1) if has_row else None
+    i += has_row
+    col = refs[i][...].reshape(-1) if has_col else None
+    i += has_col
+    o_ref = refs[i]
+    w = dequant_values(
+        q_ref[...], s_ref[...], row, col,
+        fmt=fmt, block_size=block_size, d_in=d_in, codebook=cb,
+    ).astype(x_ref.dtype)
+    acc = jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def quantized_matmul_kernel_call(
+    x: jnp.ndarray,                       # (rows, d_in)
+    packed: jnp.ndarray,                  # (d_in//2 | d_in, d_out)
+    scales: jnp.ndarray,                  # (nb, d_out)
+    row_norm: Optional[jnp.ndarray],      # (d_in, 1) or None
+    col_norm: Optional[jnp.ndarray],      # (1, d_out) or None
+    *,
+    fmt: str,
+    block_size: int,
+    block_rows: int = 128,
+    block_cols: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    # interpret=None auto-detects via dispatch.on_cpu (TPU callers
+    # bypassing the quantized_matmul wrapper must not silently run
+    # interpret mode)
+    interpret = resolve_interpret(interpret)
+    rows, d_in = x.shape
+    d_out = packed.shape[1]
+    kp = packed.shape[0]
+    if d_in != kp * (2 if fmt == "nf4" else 1):
+        raise ValueError(f"packed rows {kp} do not match d_in={d_in}")
+    nb = scales.shape[0]
+    block_cols = min(block_cols, d_out)
+    if rows % block_rows or d_out % block_cols:
+        raise ValueError("rows/cols not divisible by block sizes")
+    grid = (rows // block_rows, d_out // block_cols)
+
+    in_specs = [
+        pl.BlockSpec((block_rows, d_in), lambda i, j: (i, 0)),
+        pl.BlockSpec((kp, block_cols), lambda i, j: (0, j)),
+        pl.BlockSpec((nb, block_cols), lambda i, j: (0, j)),
+    ]
+    operands = [x, packed, scales]
+    if fmt == "nf4":
+        # the 64-byte codebook rides along as an operand: a kernel body
+        # cannot capture host constants
+        in_specs.append(pl.BlockSpec((1, 16), lambda i, j: (0, 0)))
+        operands.append(jnp.asarray(NF4_CODEBOOK).reshape(1, 16))
+    if row_norm is not None:
+        in_specs.append(pl.BlockSpec((d_in, 1), lambda i, j: (0, 0)))
+        operands.append(row_norm)
+    if col_norm is not None:
+        in_specs.append(pl.BlockSpec((1, block_cols), lambda i, j: (0, j)))
+        operands.append(col_norm)
+    out_spec = pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+
+    kernel = functools.partial(
+        _kernel, fmt=fmt, block_size=block_size, d_in=d_in,
+        has_row=row_norm is not None, has_col=col_norm is not None,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), x.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
+def quantized_vmem_ok(qw: QuantizedLinear, block_rows: int,
+                      block_cols: int, dtype_bytes: int = 2) -> bool:
+    """Does one grid step's working set fit the VMEM budget?
+
+    Same arithmetic as the contract checker (``repro.analysis.kernels``)
+    via the shared ``kernels.vmem.vmem_footprint``: x tile + packed tile
+    + scale tile + the fp32 dequantized tile and its activation-dtype
+    cast + norm vectors + output tile.
+    """
+    d_in, d_out = qw.shape[-2], qw.shape[-1]
+    bc = min(block_cols, d_out)
+    kp = qw.packed.shape[-2]
+    nb = qw.scales.shape[-2]
+    blocks = [
+        ((block_rows, d_in), dtype_bytes),       # x tile
+        ((kp, bc), 1),                           # packed tile
+        ((nb, bc), jnp.dtype(qw.scales.dtype).itemsize),
+        ((d_in, bc), 4),                         # fp32 dequantized tile
+        ((d_in, bc), dtype_bytes),               # activation-dtype cast
+        ((block_rows, bc), dtype_bytes),         # output tile
+    ]
+    if qw.row_norm is not None:
+        blocks.append(((d_in, 1), 4))
+    if qw.col_norm is not None:
+        blocks.append(((1, bc), 4))
+    return vmem_footprint(blocks) < VMEM_BUDGET_BYTES
+
+
+def quantized_matmul(
+    x: jnp.ndarray,
+    qw: QuantizedLinear,
+    *,
+    block_rows: int = 128,
+    block_cols: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused dequant-matmul ``x @ dequant(qw)`` for a 2-D quantized
+    weight; bitwise equal to :func:`quantized_matmul_ref` on every
+    shape (the VMEM fallback IS the reference, so dispatch never
+    changes results).  ``interpret=None`` resolves inside the kernel
+    call (interpret on CPU, Mosaic on TPU)."""
+    if qw.ndim != 2:
+        raise ValueError(f"quantized_matmul needs a 2-D weight, got "
+                         f"{qw.shape}")
+    if not quantized_vmem_ok(
+        qw, block_rows, block_cols,
+        dtype_bytes=jnp.dtype(x.dtype).itemsize,
+    ):
+        return matmul_ref(x, qw)
+    d_in, d_out = qw.shape
+    batch = x.shape[:-1]
+    xf = x.reshape(-1, d_in)
+    rows = xf.shape[0]
+    pad_r = (-rows) % block_rows
+    if pad_r:
+        xf = jnp.pad(xf, ((0, pad_r), (0, 0)))
+    bc = min(block_cols, d_out)
+    pad_c = (-d_out) % bc
+    packed, scales = qw.packed, qw.scales
+    col = qw.col_norm
+    if pad_c:
+        packed = jnp.pad(packed, ((0, 0), (0, pad_c)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad_c)))
+        if col is not None:
+            col = jnp.pad(col, ((0, pad_c),))
+    row = qw.row_norm
+    out = quantized_matmul_kernel_call(
+        xf, packed, scales,
+        row.reshape(d_in, 1) if row is not None else None,
+        col.reshape(1, d_out + pad_c) if col is not None else None,
+        fmt=qw.fmt, block_size=qw.block_size,
+        block_rows=block_rows, block_cols=bc, interpret=interpret,
+    )
+    return out[:rows, :d_out].reshape(*batch, d_out)

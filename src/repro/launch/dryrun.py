@@ -94,6 +94,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         # (attention_backend_adjustment), the same convention as the
         # collective-bytes model.
         cfg_lowered = cfg.replace(attn_backend="reference")
+    if cfg.base_quant is not None:
+        # Same convention: the fused dequant-matmul is a custom-call the
+        # cost parser can't see through.  Lower the fp program; the
+        # roofline rebills the quantizable weight streams at packed bytes
+        # (quantized_base_adjustment).
+        cfg_lowered = cfg_lowered.replace(base_quant=None)
     progs = build_programs(cfg_lowered, shape, dp_axes=dp)
 
     t0 = time.time()

@@ -41,6 +41,7 @@ __all__ = [
     "active_param_count",
     "attention_backend_adjustment",
     "paged_cache_adjustment",
+    "quantized_base_adjustment",
 ]
 
 # TPU v5e per chip
@@ -333,6 +334,76 @@ def paged_cache_adjustment(
     }
 
 
+def quantized_base_adjustment(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Optional[Dict[str, float]]:
+    """Analytic decode weight-stream swap for ``cfg.base_quant``.
+
+    Decode is weight-streaming bound: every step reads the full frozen
+    base once per token batch.  With a quantized base
+    (``core.quantize.QuantizedLinear``) the fused dequant-matmul kernel
+    streams the PACKED codes + per-block scales from HBM and dequantizes
+    in VMEM — the fp matrix never exists in HBM.  The dry-run lowers the
+    fp program (``launch.dryrun`` strips ``base_quant`` before lowering,
+    same convention as the flash-attention swap), so the weight reads of
+    the quantizable projections are rebilled here at packed bytes:
+
+    * per-param fp bytes: ``itemsize(param_dtype)``,
+    * per-param packed bytes: ``0.5`` (nf4) / ``1.0`` (int8) plus the
+      amortized fp32 block scale ``4 / quant_block_size``.
+
+    Only projections ``core.quantize.quantize_params`` actually targets
+    are counted — per family: dense q/k/v/o + gate/up/down; MoE attention
+    only (expert stacks are 4-D and stay dense, router is untargeted);
+    SSM z/x/out projections (bc/dt projections use raw matmuls and stay
+    dense); hybrid recurrent gate/rec/out + attention + gated MLP per
+    macro-block (the ``w_a``/``w_x`` square recurrence weights stay
+    dense).  Embedding/LM head are never quantized.  Prefill/train shapes
+    return ``None``: there the weight read is amortized over ``S`` tokens
+    and compute dominates — conservative by construction.
+
+    The savings are divided by ``n_chips`` at application time: the
+    projection weights ARE TP-sharded (unlike the paged-cache gather), so
+    each device streams only its shard.
+    """
+    if cfg.base_quant is None or shape.kind != "decode":
+        return None
+    if cfg.base_quant not in ("nf4", "int8"):
+        raise ValueError(f"unknown base_quant {cfg.base_quant!r}")
+    d, ff, nl = cfg.d_model, cfg.d_ff, cfg.n_layers
+    attn = d * cfg.attn_dim + 2 * d * cfg.kv_dim + cfg.attn_dim * d
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * d
+        q_params = nl * (2 * d * di + di * d)          # z_proj, x_proj, out
+    elif cfg.family == "hybrid":
+        dr = cfg.lru_width or d
+        rec_q = 2 * d * dr + dr * d                    # gate, rec, out proj
+        mlp_q = 3 * d * ff                             # gate, up, down
+        n_macro = nl // cfg.attn_period
+        n_tail = nl - n_macro * cfg.attn_period
+        q_params = (
+            n_macro * (2 * rec_q + attn + 3 * mlp_q)
+            + n_tail * (rec_q + mlp_q)
+        )
+    elif cfg.is_moe:
+        q_params = nl * attn                           # experts stay dense
+    else:
+        q_params = nl * (attn + 3 * d * ff)
+    fp_bytes = float(np.dtype(cfg.param_dtype).itemsize)
+    scale_bytes = 4.0  # fp32 per-block scales (core.quantize default)
+    code_bytes = 0.5 if cfg.base_quant == "nf4" else 1.0
+    q_bytes = code_bytes + scale_bytes / cfg.quant_block_size
+    return {
+        "fmt": cfg.base_quant,
+        "block_size": cfg.quant_block_size,
+        "quantized_params": float(q_params),
+        "weight_bytes_fp": float(q_params) * fp_bytes,
+        "weight_bytes_quant": float(q_params) * q_bytes,
+        "weight_bytes_saved": float(q_params) * (fp_bytes - q_bytes),
+        "weight_stream_cut": fp_bytes / q_bytes,
+    }
+
+
 def roofline_terms(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -360,6 +431,14 @@ def roofline_terms(
         # for attention (see paged_cache_adjustment), so the read — and
         # its shrinkage — appear in the per-device bytes at full size.
         hlo_bytes_dev = max(0.0, hlo_bytes_dev - padj["kv_bytes_saved"])
+    qadj = quantized_base_adjustment(cfg, shape)
+    if qadj is not None:
+        # Weight-stream reads billed at packed bytes.  Divided by chips:
+        # projection weights ARE TP-sharded (unlike the cache gather), so
+        # each device streams only its own shard — same convention as adj.
+        hlo_bytes_dev = max(
+            0.0, hlo_bytes_dev - qadj["weight_bytes_saved"] / n_chips
+        )
     coll_per_device = float(sum(collective_bytes.values()))
     t_compute = hlo_flops_dev / HW["peak_flops"]
     t_memory = hlo_bytes_dev / HW["hbm_bw"]
@@ -378,6 +457,8 @@ def roofline_terms(
         "attn_adjustment": adj,
         "kv_cache": cfg.kv_cache,
         "paged_adjustment": padj,
+        "base_quant": cfg.base_quant,
+        "quantized_adjustment": qadj,
         "dominant": dominant.replace("_s", ""),
         "hlo_flops_per_device": hlo_flops_dev,
         "hlo_flops": hlo_flops_global,

@@ -94,6 +94,17 @@ def _rules(cfg: ModelConfig, decode: bool = False):
                 (r".*/moe/router$", (None, None)),
             ]
     rules += [
+        # Quantized frozen base (core.quantize.QuantizedLinear): the packed
+        # code matrix keeps the dense weight's layout on its trailing dims
+        # (nf4 halves d_in, which stays model-divisible for even shards),
+        # and the per-block scales follow the d_out/d_in axis of their
+        # projection.  Block-count axes that don't divide the mesh fall
+        # back to replicated via the usual divisibility check — the rules
+        # are perf-only, GSPMD semantics are unchanged either way.
+        (r".*/(%s)/(packed|scales)$" % "|".join(_COL), (None, "model")),
+        (r".*/(%s)/col_norm$" % "|".join(_COL), ("model",)),
+        (r".*/(%s)/(packed|scales)$" % "|".join(_ROW), ("model", None)),
+        (r".*/(%s)/row_norm$" % "|".join(_ROW), ("model",)),
         (r".*/(%s)$" % "|".join(_COL), (None, "model")),
         (r".*/(%s)$" % "|".join(_ROW), ("model", None)),
         (r".*/(q_bias|k_bias|v_bias)$", ("model",)),
@@ -166,8 +177,11 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree: Any,
     rules = _rules(cfg, decode=decode)
 
     def assign(path_elems, leaf) -> NamedSharding:
+        # GetAttrKey (dataclass leaves, e.g. QuantizedLinear.packed) carries
+        # `.name`; DictKey carries `.key`; SequenceKey carries `.idx`.
         path = "/".join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_elems
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path_elems
         )
         for pattern, trailing in rules:
             if re.fullmatch(pattern, path):
@@ -244,7 +258,8 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
         if paged and isinstance(leaf_spec, PagedCacheLeafSpec):
             return pool_assign(leaf_spec, leaf.shape)
         path = "/".join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_elems
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path_elems
         )
         shape = leaf.shape
         spec_: list = [None] * len(shape)

@@ -115,6 +115,15 @@ class ModelConfig:
     kv_cache: str = "dense"
     kv_block_size: int = 64
     kv_occupancy: float = 0.5
+    # Frozen-base weight quantization (serving + roofline accounting):
+    # None | "nf4" | "int8".  The serving engine packs every projection
+    # applied through peft_linear into core.quantize.QuantizedLinear
+    # (blockwise scales along d_in, quant_block_size rows per block) and
+    # the roofline bills decode weight reads at the quantized bytes
+    # (launch.roofline.quantized_base_adjustment).  Embeddings, the LM
+    # head, norms, and raw-matmul projections stay dense.
+    base_quant: Optional[str] = None
+    quant_block_size: int = 64
     # remat policy for train_step
     remat: bool = True
     # FSDP: additionally shard big weight stacks over the data axis

@@ -23,6 +23,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import blockwise_round, blockwise_scales
+
 __all__ = [
     "ErrorFeedbackState",
     "compress_int8",
@@ -40,11 +42,17 @@ class ErrorFeedbackState:
 
 
 def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    """Symmetric per-tensor int8 quantization: returns (q, scale).
+
+    One scale/round implementation with blockwise weight quantization
+    (``core.quantize``): per-tensor is the single-block case of the
+    shared ``blockwise_scales``/``blockwise_round`` helpers.
+    """
     x32 = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    flat = x32.reshape(-1)
+    scale = blockwise_scales(flat, None, axis=0, levels=127.0)
+    q = blockwise_round(flat, scale, flat.shape[0], axis=0, levels=127)
+    return q.astype(jnp.int8).reshape(x.shape), scale[0]
 
 
 def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:

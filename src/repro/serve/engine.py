@@ -55,9 +55,24 @@ the dense mode's single compile.
 
 ``stats`` exposes jitted-dispatch counters (``prefill_calls`` /
 ``decode_calls`` / ``chunk_calls`` — benchmarks assert O(1) prefill
-admission) and cache-memory gauges (``cache_bytes_allocated``,
-``blocks_in_use``, ``peak_block_utilization``, ...) that
-``benchmarks/serve_bench.py`` reports for dense vs paged.
+admission) and memory gauges (``cache_bytes_allocated``,
+``blocks_in_use``, ``peak_block_utilization``, ``param_bytes`` —
+per-host frozen-base weight bytes, ``adapter_bytes``, ...) that
+``benchmarks/serve_bench.py`` reports for dense vs paged and fp vs
+quantized bases.
+
+Quantized frozen base (``base_quant="nf4" | "int8"``): every projection
+the models apply through ``peft_linear`` is packed into a blockwise
+``core.quantize.QuantizedLinear`` (4-bit NF4 codebook or int8, per-block
+scales along ``d_in``) before device placement — the QLoRA serving
+pattern: ~4x fewer weight bytes per decode tick, full-precision
+adapters (single sets AND banks) composing on top of the dequant-matmul
+(``cfg.peft_backend="pallas"`` fuses it in VMEM via
+``kernels.quantized_matmul``; the reference path is bitwise identical).
+Quantization is idempotent, so pre-quantized params pass through — a
+bank built over the same quantized base serves token-for-token
+identically to per-tenant single-tenant engines (tested, dense + paged
++ sharded).
 
 Sharded serving (``mesh=...``, e.g. ``launch.mesh.make_host_mesh(2, 4)``):
 the engine becomes mesh-aware end to end —
@@ -183,9 +198,22 @@ class ServingEngine:
         n_blocks: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
+        base_quant: Optional[str] = None,
     ):
         self.model = model
         self.cfg = model.cfg
+        # frozen-base weight quantization (the QLoRA serving pattern):
+        # pack every peft_linear projection into QuantizedLinear before
+        # placement; adapters stay full-precision and compose on top of
+        # the dequant-matmul.  Idempotent for pre-quantized params.
+        self.base_quant = base_quant
+        if base_quant is not None:
+            from repro.core.quantize import quantize_params
+
+            params = quantize_params(
+                params, base_quant,
+                block_size=self.cfg.quant_block_size,
+            )
         self.n_slots = n_slots
         self.max_len = max_len
         self.seq_bucket = seq_bucket
@@ -302,6 +330,13 @@ class ServingEngine:
             "adapter_tenants": (
                 self.bank.num_tenants if self.bank is not None else 0
             ),
+            # per-host frozen-base weight bytes (a quantized base shows
+            # its ~4x cut here; serve_bench reports it per row)
+            "param_bytes": int(sum(
+                addressable_nbytes(leaf)
+                for leaf in jax.tree_util.tree_leaves(self.params)
+            )),
+            "base_quant": base_quant or "none",
         }
 
         can_prefill = (

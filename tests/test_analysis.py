@@ -45,10 +45,10 @@ def _checks(rec, **kw):
 # ----------------------------------------------- kernel contract checker
 
 def test_repo_kernels_all_clean_and_registered():
-    """The real kernels must pass, and all five families are registered."""
+    """The real kernels must pass, and all six families are registered."""
     assert ak.registered_kernels() == [
         "flash_decode", "flash_fwd", "paged_decode",
-        "quanta_apply", "quanta_linear",
+        "quanta_apply", "quanta_linear", "quantized_matmul",
     ]
     findings = ak.check_kernels()
     assert findings == [], [str(f) for f in findings]

@@ -213,6 +213,30 @@ def test_sharded_adapter_bank_matches_single_device():
 
 
 @multidevice
+def test_sharded_quantized_base_matches_single_device():
+    """Quantized-base mesh leg: with ``base_quant="nf4"`` the packed
+    uint8 codes and per-block scales take the projection sharding rules
+    (launch.shardings routes QuantizedLinear children by their parent
+    path), and the sharded engine — dense AND paged — must generate
+    token-for-token what the single-device quantized engine does."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, e0 = _serve(model, params, n_slots=4, max_len=64,
+                      base_quant="nf4")
+    fp_bytes = _serve(model, params, n_slots=4, max_len=64,
+                      mesh=_mesh())[1].stats["param_bytes"]
+    for mode in ("dense", "paged"):
+        out, engine = _serve(model, params, n_slots=4, max_len=64,
+                             mesh=_mesh(), cache=mode, block_size=8,
+                             base_quant="nf4")
+        assert out == base, mode
+        assert engine.stats["base_quant"] == "nf4"
+        # the per-host gauge shrinks vs the fp engine on the same mesh
+        assert 0 < engine.stats["param_bytes"] < fp_bytes
+
+
+@multidevice
 def test_sharded_prefill_admission_is_o1_dispatches():
     """O(1) jitted dispatch per admitted wave must survive the mesh: one
     prefill call and the tick's one fused decode, regardless of prompt
