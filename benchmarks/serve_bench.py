@@ -41,16 +41,33 @@ compiles):
   report tokens/sec plus the ``adapter_bytes`` / ``adapter_tenants``
   gauges next to the cache bytes.
 
+* **open-loop front end** (``--open-loop``) — a seeded Poisson arrival
+  schedule (two SLA classes, ``interactive``/``batch``) streamed
+  through ``ServeFrontend`` on the REAL clock, dense and paged: rows
+  report exact (raw-timestamp) TTFT p50/p99, per-token latency (TPOT)
+  p50/p99, SLO attainment, and goodput (tokens/sec from requests that
+  met their class's TTFT target) per latency class, plus the engine's
+  tick-latency / TTFT histogram gauges, peak queue depths, and the
+  double-buffer chain rate.  Streamed outputs are asserted
+  token-for-token identical to the closed-loop engine on the same
+  requests (the open-loop CI gate), and at least one chained
+  (double-buffered) dispatch must have engaged.  ``--record PATH``
+  additionally writes the metrics as JSON — the committed baseline
+  lives at ``benchmarks/results/serving/openloop_smoke.json``.
+
 CSV rows via ``benchmarks.common.csv_row``:
 ``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``,
 ``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``,
 ``serve_quant_<family>_nf4_<dense|paged>, ...``,
-``serve_adapters_<family>_<single|pallas|bank8|merged>, ...`` and
-``serve_sharded_<family>_<dense|paged>, ...``.
+``serve_adapters_<family>_<single|pallas|bank8|merged>, ...``,
+``serve_sharded_<family>_<dense|paged>, ...`` and
+``serve_openloop_<family>_<dense|paged>_<class|engine>, <ttft p50 us>,
+<derived>``.
 
 ``--smoke`` (CI gate) runs the transformer family only, with the paged
 vs dense, quantized-base (nf4 dense vs paged), multi-adapter (bank8 /
-pallas / merged vs single), and — with ``--sharded`` — sharded vs
+pallas / merged vs single), open-loop vs closed-loop
+(``--open-loop``), and — with ``--sharded`` — sharded vs
 single-device equivalence assertions intact.
 """
 
@@ -79,7 +96,9 @@ from repro.core.bank import AdapterBank
 from repro.core.peft import PeftConfig, attach, merge_all
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
-from repro.serve import Request, ServingEngine
+from repro.serve import (
+    DEFAULT_CLASSES, Request, ServeFrontend, ServingEngine, poisson_arrivals,
+)
 
 FAMILIES = {
     "transformer": "qwen2-0.5b",
@@ -353,13 +372,181 @@ def bench_sharded(family: str, model, params, base):
     return rows
 
 
-def main(smoke: bool = False, sharded: bool = False) -> None:
+OPENLOOP_N = 24           # requests per open-loop schedule
+OPENLOOP_RATE = 100.0     # Poisson arrivals/sec across both classes
+OPENLOOP_SEED = 0
+
+
+def bench_open_loop(family: str, model, params):
+    """Open-loop Poisson load through the SLA front end, dense and paged:
+    exact (raw stream-timestamp) latency percentiles and per-class
+    goodput, with the streamed outputs asserted token-for-token equal to
+    the closed-loop engine on the same requests and at least one chained
+    (double-buffered) dispatch required."""
+    rows, results = [], {}
+    targets = {c.name: c.ttft_target for c in DEFAULT_CLASSES}
+    for mode in ("dense", "paged"):
+        kw = (
+            dict(cache="paged", block_size=BLOCK_SIZE)
+            if mode == "paged" else {}
+        )
+        prompts = _prompts(OPENLOOP_N, seed=3)
+
+        # closed-loop reference: same engine config, plain FIFO run()
+        ref_engine = ServingEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            admission="prefill", **kw,
+        )
+        ref_reqs = [
+            Request(uid=i, prompt=list(p), max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)
+        ]
+        for r in ref_reqs:
+            ref_engine.submit(r)
+        ref_engine.run()
+        ref = {r.uid: r.output for r in ref_reqs}
+
+        engine = ServingEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            admission="prefill", **kw,
+        )
+        fe = ServeFrontend(engine)
+        warm = [
+            Request(uid=1000 + i, prompt=list(p), max_new_tokens=MAX_NEW)
+            for i, p in enumerate(_prompts(N_SLOTS, seed=1))
+        ]
+        for r in warm:                       # warmup pays the jit compiles
+            fe.submit(r)
+        fe.drain()
+
+        # seeded Poisson schedule, pre-submitted with future arrival
+        # times: the scheduler releases each request when the clock
+        # reaches it (arrivals independent of service — open loop).
+        arrivals = poisson_arrivals(
+            np.random.default_rng(OPENLOOP_SEED), OPENLOOP_RATE,
+            OPENLOOP_N, start=engine.clock() + 0.01,
+        )
+        reqs = [
+            Request(uid=i, prompt=list(p), max_new_tokens=MAX_NEW,
+                    arrival_time=float(arrivals[i]),
+                    latency_class="interactive" if i % 2 == 0 else "batch")
+            for i, p in enumerate(prompts)
+        ]
+        streams = [fe.submit(r) for r in reqs]
+        t0 = time.perf_counter()
+        fe.drain()
+        wall_s = time.perf_counter() - t0
+
+        outs = {r.uid: r.output for r in reqs}
+        assert outs == ref, (
+            f"{family}: open-loop {mode} front end diverged from the "
+            "closed-loop engine"
+        )
+        assert fe.stats["chained"] > 0, (
+            f"{family}: double-buffered dispatch never engaged"
+        )
+
+        per_class = {}
+        for cls in targets:
+            cs = [s for s in streams if s.request.latency_class == cls]
+            ttfts = np.array([
+                s.token_times[0] - s.request.arrival_time for s in cs
+            ])
+            tpots = np.concatenate([
+                np.diff(s.token_times) for s in cs
+                if len(s.token_times) > 1
+            ])
+            met = ttfts <= targets[cls]
+            good_toks = sum(
+                len(s.tokens) for s, ok in zip(cs, met) if ok
+            )
+            m = {
+                "n_requests": len(cs),
+                "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+                "ttft_p99_ms": float(np.percentile(ttfts, 99) * 1e3),
+                "tpot_p50_ms": float(np.percentile(tpots, 50) * 1e3),
+                "tpot_p99_ms": float(np.percentile(tpots, 99) * 1e3),
+                "slo_attainment": float(np.mean(met)),
+                "goodput_toks_s": float(good_toks / wall_s),
+            }
+            per_class[cls] = m
+            rows.append(csv_row(
+                f"serve_openloop_{family}_{mode}_{cls}",
+                m["ttft_p50_ms"] * 1e3,
+                f"ttft_p99_ms={m['ttft_p99_ms']:.2f} "
+                f"tpot_p50_ms={m['tpot_p50_ms']:.2f} "
+                f"tpot_p99_ms={m['tpot_p99_ms']:.2f} "
+                f"goodput_toks_s={m['goodput_toks_s']:.0f} "
+                f"slo_attainment={m['slo_attainment']:.2f}",
+            ))
+        s = engine.stats
+        depth = "/".join(
+            f"{k}:{v}" for k, v in sorted(
+                s.get("queue_depth_peak", {}).items()
+            )
+        )
+        rows.append(csv_row(
+            f"serve_openloop_{family}_{mode}_engine",
+            s["tick_p50"] * 1e6,
+            f"tick_p99_us={s['tick_p99'] * 1e6:.0f} "
+            f"ttft_gauge_p50_ms={s['ttft_p50'] * 1e3:.2f} "
+            f"ttft_gauge_p99_ms={s['ttft_p99'] * 1e3:.2f} "
+            f"chained={fe.stats['chained']} ticks={fe.stats['ticks']} "
+            f"preemptions={s['preemptions']} qdepth_peak={depth}",
+        ))
+        results[mode] = {
+            "per_class": per_class,
+            "wall_s": wall_s,
+            "chained": fe.stats["chained"],
+            "host_dispatch": fe.stats["host_dispatch"],
+            "ticks": fe.stats["ticks"],
+            "preemptions": s["preemptions"],
+            "queue_depth_peak": s.get("queue_depth_peak", {}),
+            "tick_hist": engine.tick_hist.to_dict(),
+        }
+    return rows, results
+
+
+def main(
+    smoke: bool = False, sharded: bool = False, open_loop: bool = False,
+    record: str = None,
+) -> None:
     families = (
         {"transformer": FAMILIES["transformer"]} if smoke else FAMILIES
     )
+    recorded = {}
     for family, arch in families.items():
         for row in bench_family(family, arch, sharded=sharded):
             print(row)
+        if open_loop:
+            cfg = get_smoke(arch)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            rows, results = bench_open_loop(family, model, params)
+            for row in rows:
+                print(row)
+            recorded[family] = results
+    if record and recorded:
+        import json
+
+        payload = {
+            "bench": "serve_openloop",
+            "config": {
+                "n_slots": N_SLOTS, "max_len": MAX_LEN,
+                "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+                "block_size": BLOCK_SIZE, "n_requests": OPENLOOP_N,
+                "rate_per_s": OPENLOOP_RATE, "seed": OPENLOOP_SEED,
+                "classes": {
+                    c.name: c.ttft_target for c in DEFAULT_CLASSES
+                },
+            },
+            "families": recorded,
+        }
+        os.makedirs(os.path.dirname(record) or ".", exist_ok=True)
+        with open(record, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# open-loop record written to {record}", file=sys.stderr)
 
 
 if __name__ == "__main__":
@@ -369,6 +556,15 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="add mesh-sharded engine rows (forces 8 virtual "
                          "CPU devices; must be set at process start)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="add open-loop Poisson load rows through the SLA "
+                         "front end (TTFT/TPOT percentiles, goodput per "
+                         "latency class)")
+    ap.add_argument("--record", metavar="PATH",
+                    help="with --open-loop: also write the metrics as JSON "
+                         "(the committed baseline lives under "
+                         "benchmarks/results/serving/)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(smoke=args.smoke, sharded=args.sharded)
+    main(smoke=args.smoke, sharded=args.sharded, open_loop=args.open_loop,
+         record=args.record)

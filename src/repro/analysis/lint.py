@@ -78,6 +78,18 @@ HOT_PATHS = {
     "ServingEngine._insert_wave",
     "ServingEngine._decode_args",
     "ServingEngine._preempt",
+    "ServingEngine._ensure_growth",
+    "ServingEngine.dispatch_decode",
+    "ServingEngine._postprocess",
+    # async front end: every method on the per-tick scheduling path
+    "ServeFrontend.tick",
+    "ServeFrontend.drain",
+    "ServeFrontend.serve",
+    "ServeFrontend._dispatch",
+    "ServeFrontend._land_inflight",
+    "ServeFrontend._chain_safe",
+    "ServeFrontend._ensure_chain",
+    "ServeFrontend._flush_streams",
 }
 # Allowed in hot paths: the H2D upload of freshly built host buffers,
 # plus dtype *names* (jnp.int32 etc. is a type object, not a device op).

@@ -1,11 +1,22 @@
 """Serving runtime: batched continuous-batching engine (dense or paged
 KV cache, single-device or mesh-sharded) over merged, adapter-attached,
 or multi-tenant (``AdapterBank`` + per-request adapter selection)
-models."""
+models, plus the async SLA-scheduled streaming front end
+(``ServeFrontend``) layered on top."""
 
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.frontend import ServeFrontend, TokenStream
 from repro.serve.paging import (
     BlockAllocator,
     PagedCacheView,
     addressable_nbytes,
+)
+from repro.serve.scheduler import (
+    DEFAULT_CLASSES,
+    InterleavePolicy,
+    LatencyHistogram,
+    SLAClass,
+    SLAScheduler,
+    VirtualClock,
+    poisson_arrivals,
 )

@@ -125,6 +125,38 @@ Adapters (single-tenant vs multi-tenant):
   ``launch.shardings.peft_shardings`` (replicated by default; the bank
   axis can be DP-split).
 
+Async front end (``repro.serve.frontend.ServeFrontend``): this engine is
+the **closed-loop core** — ``step()`` admits, dispatches one fused
+decode, fetches tokens, and lands them, synchronously.  The front end
+layers continuous batching with SLA latency classes on top through the
+seams this module exposes:
+
+* ``validate()`` + ``_admit(queue=...)`` — admission driven by the SLA
+  scheduler's EDF-ordered class queues (``repro.serve.scheduler``)
+  instead of the engine FIFO, with ``_admit(chunk=False)`` handing the
+  chunked-prefill cadence to the front end's interleave policy,
+* ``requeue_hook`` / ``victim_hook`` — preemption requeues into the
+  scheduler's class queues and victim selection becomes SLA-aware
+  (lowest-priority class, then latest arrival) while still flowing
+  through the paged-arena machinery above,
+* ``dispatch_decode()`` / ``_sample`` / ``_postprocess()`` —
+  double-buffered ticks: the front end chains the device-resident
+  sampled tokens of an un-landed tick straight into the next decode
+  dispatch and only then fetches the older tick's tokens, overlapping
+  host work (streaming, admission, block allocation) with the device
+  step.  ``_fresh`` marks slots whose ``_last_token`` was written by
+  admission after the last dispatch — their next token must come from
+  the host, not the device chain.
+
+Greedy per-request outputs are **scheduling-independent**: slots are
+batch-independent and preemption resumes recompute-exact, so any
+front-end admission order is token-for-token identical to this closed
+loop (pinned by ``tests/test_frontend.py`` for all three families,
+dense and paged, mixed adapter tenants).  ``Request.arrival_time`` /
+``latency_class`` feed the per-class TTFT histograms and queue-depth
+gauges (``stats["ttft_p50"]`` / ``["queue_depth"]`` / tick-latency
+percentiles) surfaced in ``benchmarks/serve_bench.py --open-loop``.
+
 Correctness tooling (``repro.analysis``):
 
 * every jitted entry point is registered on a
@@ -152,8 +184,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -163,6 +196,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis import sanitize
 from repro.models.common import merge_cache_slots, reset_cache_slots
 from repro.serve.paging import PagedCacheView, addressable_nbytes
+from repro.serve.scheduler import LatencyHistogram
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -176,9 +210,17 @@ class Request:
     # multi-tenant serving: which bank adapter to decode with (None = the
     # base model; only valid on engines built with ``adapters=``)
     adapter: Optional[str] = None
+    # SLA scheduling (repro.serve.scheduler): arrival stamp (engine clock
+    # at submit when None — an open-loop harness sets future arrivals
+    # explicitly) and the latency class the SLA scheduler queues it
+    # under.  Both survive preemption: requeue reuses this very object,
+    # never a rebuilt copy (pinned by test).
+    arrival_time: Optional[float] = None
+    latency_class: str = "interactive"
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    first_token_time: Optional[float] = None
 
 
 class ServingEngine:
@@ -236,6 +278,25 @@ class ServingEngine:
         # per-slot tenant ids (0 = base model), threaded into every
         # serving jit when a bank is attached
         self._adapter_ids = np.zeros((n_slots,), np.int32)
+        # ``True`` where admission wrote ``_last_token`` after the most
+        # recent decode dispatch: the async front end must source those
+        # slots' next tokens from the host, not its device-resident
+        # sampled-token chain.  The closed loop never reads it.
+        self._fresh = np.zeros((n_slots,), bool)
+        # wall clock for arrival stamps / TTFT / tick latency; the front
+        # end and tests may swap in a virtual clock.
+        self.clock: Callable[[], float] = time.monotonic
+        # front-end hooks: where a preempted request requeues (default:
+        # the engine's own FIFO front) and how a preemption victim is
+        # picked among the slots sharing an exhausted block arena
+        # (default: the highest candidate slot — vLLM-style).
+        self.requeue_hook: Optional[Callable[[Request], None]] = None
+        self.victim_hook: Optional[
+            Callable[[List[int], List[Optional[Request]]], int]
+        ] = None
+        # latency gauges: fused-tick wall time and per-class TTFT
+        self.tick_hist = LatencyHistogram()
+        self.ttft_hists: Dict[str, LatencyHistogram] = {}
 
         # --- mesh-aware layout: DP arena count for the paged allocator
         # (slot axis must divide over the DP axes, else slots replicate
@@ -415,6 +476,18 @@ class ServingEngine:
                 )
                 in_sh = (cache_sh, repl)
         self._decode = _jit(fn, in_sh=in_sh, out_sh=(repl, cache_sh))
+        # greedy sampler over the fused decode's (B, 1, V) logits,
+        # device-side: returns (B, 1) int32 next tokens WITHOUT a host
+        # round-trip, so the async front end can chain them straight
+        # into the next decode dispatch (double-buffered ticks) and the
+        # closed loop fetches them with one D2H copy.
+        vocab = self.cfg.vocab_size
+        self._sample = _jit(
+            lambda logits: jnp.argmax(
+                logits[:, :, :vocab], -1
+            ).astype(jnp.int32),
+            in_sh=repl, out_sh=repl,
+        )
         if admission != "prefill":
             self._prefill = None
         elif banked:
@@ -485,6 +558,7 @@ class ServingEngine:
         self.compile_guard.register("chunk", self._chunk_fn, bounds["chunk"])
         self.compile_guard.register("insert", self._insert_fn,
                                     bounds["insert"])
+        self.compile_guard.register("sample", self._sample, bounds["sample"])
         self._update_gauges()
 
     # ------------------------------------------------------ compile bounds
@@ -498,14 +572,19 @@ class ServingEngine:
         * ``prefill`` — ``ceil(max_len / seq_bucket)``: waves are padded
           to ``n_slots`` rows and the token axis is bucketed, so at most
           one compile per token bucket.
-        * ``chunk`` — 1: chunked prefill always feeds fixed
-          ``(1, prefill_chunk)`` token blocks into a fixed-shape staging
-          buffer.
+        * ``chunk`` — ``n_buckets + 2`` when chunking is enabled (else
+          1): every chunk step feeds a fixed ``(1, prefill_chunk)``
+          token block, but the staging buffer it updates is sized per
+          request — chunk-aligned then bucketed, so one compile per
+          distinct staging extent, which may exceed ``max_len`` by up
+          to ``prefill_chunk + seq_bucket``.
         * ``insert`` — ``n_slots * (n_buckets + 2)``: the scatter (jitted
           only under a mesh) sees one layout per distinct
           ``(wave rows, token bucket)`` pair; chunked staging adds
           single-row layouts whose token extent may exceed ``max_len``
           by up to ``prefill_chunk + seq_bucket``.
+        * ``sample`` — 1: the greedy sampler only ever sees the fused
+          decode's fixed ``(n_slots, 1, V)`` logits.
 
         Under a mesh, cache-carrying entry points get **+1 slack**: the
         first tick feeds the freshly ``device_put`` cache, whose
@@ -519,11 +598,13 @@ class ServingEngine:
         """
         n_buckets = -(-self.max_len // self.seq_bucket)
         slack = 1 if self.mesh is not None else 0
+        chunked = getattr(self, "_can_chunk", False)
         return {
             "decode": 1 + slack,
             "prefill": n_buckets,
-            "chunk": 1 + slack,
+            "chunk": (n_buckets + 2 if chunked else 1) + slack,
             "insert": self.n_slots * (n_buckets + 2),
+            "sample": 1 + slack,
         }
 
     # ------------------------------------------------------------- frontend
@@ -531,6 +612,13 @@ class ServingEngine:
         """Queue a request.  ``adapter`` (or ``req.adapter``) names the bank
         tenant to decode with — engines built with ``adapters=`` only;
         ``None`` serves the base model (bank id 0)."""
+        self.validate(req, adapter)
+        self.queue.append(req)
+
+    def validate(self, req: Request, adapter: Optional[str] = None) -> None:
+        """Validate ``req`` against this engine and stamp it (adapter
+        name, ``arrival_time`` when unset) WITHOUT queueing — the SLA
+        front end routes validated requests into its own class queues."""
         name = adapter if adapter is not None else req.adapter
         if name is not None and self.bank is None:
             raise ValueError(
@@ -556,7 +644,8 @@ class ServingEngine:
                 )
         if adapter is not None:
             req.adapter = adapter    # stamp only once fully validated
-        self.queue.append(req)
+        if req.arrival_time is None:
+            req.arrival_time = self.clock()
 
     def _req_adapter_id(self, req: Request) -> int:
         return self.bank.id_of(req.adapter) if self.bank is not None else 0
@@ -589,7 +678,49 @@ class ServingEngine:
             if r is None and i not in reserved
         ]
 
+    def _note_first_token(self, req: Request) -> None:
+        """Stamp a request's time-to-first-token on its FIRST ever token
+        (a preempted request keeps its original stamp) and record it in
+        the per-class TTFT histogram."""
+        if req.first_token_time is not None:
+            return
+        now = self.clock()
+        req.first_token_time = now
+        if req.arrival_time is not None:
+            hist = self.ttft_hists.get(req.latency_class)
+            if hist is None:
+                hist = self.ttft_hists[req.latency_class] = LatencyHistogram()
+            hist.record(max(now - req.arrival_time, 0.0))
+
+    def ttft_all(self) -> LatencyHistogram:
+        """TTFT across every latency class (merged counts)."""
+        merged = LatencyHistogram()
+        for hist in self.ttft_hists.values():
+            merged.count += hist.count
+            merged.total += hist.total
+            merged.max = max(merged.max, hist.max)
+            for i, c in enumerate(hist.counts):
+                merged.counts[i] += c
+        return merged
+
+    def queue_depths(self) -> Dict[str, int]:
+        """Queued (not yet admitted) requests per latency class.  Covers
+        the engine's own FIFO; the SLA front end overwrites the gauge
+        from its class queues each tick."""
+        depths: Dict[str, int] = {}
+        for req in self.queue:
+            depths[req.latency_class] = depths.get(req.latency_class, 0) + 1
+        return depths
+
     def _update_gauges(self) -> None:
+        ttft = self.ttft_all()
+        self.stats.update(
+            ttft_p50=ttft.percentile(50),
+            ttft_p99=ttft.percentile(99),
+            tick_p50=self.tick_hist.percentile(50),
+            tick_p99=self.tick_hist.percentile(99),
+            queue_depth=self.queue_depths(),
+        )
         if self.pager is not None:
             self.stats.update(self.pager.stats())
         else:
@@ -611,14 +742,21 @@ class ServingEngine:
         return min(-(-n // self.seq_bucket) * self.seq_bucket, self.max_len)
 
     # ------------------------------------------------------------ admission
-    def _admit(self) -> None:
-        self._step_chunked()
+    def _admit(self, queue=None, chunk: bool = True) -> None:
+        """One admission pass.  ``queue`` substitutes any deque-protocol
+        source (truthiness / ``[0]`` peek / ``popleft``) for the engine's
+        FIFO — the SLA front end passes its EDF-ordered ready view;
+        ``chunk=False`` skips the fixed one-chunk-per-tick advance so the
+        front end's interleave policy can drive chunk bursts itself."""
+        if chunk:
+            self._step_chunked()
+        q = self.queue if queue is None else queue
         free = self._free_slots()
-        if not free or not self.queue:
+        if not free or not q:
             return
         wave: List[Request] = []
-        while self.queue and len(wave) < len(free):
-            nxt = self.queue[0]
+        while q and len(wave) < len(free):
+            nxt = q[0]
             n_tok = len(self._tokens(nxt))
             if self._paged:
                 # pick a remaining free slot whose ARENA can hold the
@@ -639,7 +777,7 @@ class ServingEngine:
                 # into the remaining free slots this tick.
                 if self._chunking is None:
                     self._start_chunked(
-                        self.queue.popleft(), free[len(wave)]
+                        q.popleft(), free[len(wave)]
                     )
                     free = [
                         s for s in free if s != self._chunking["slot"]
@@ -651,7 +789,7 @@ class ServingEngine:
                 # the mid-decode alloc-on-append see the reduced pool, so
                 # admission can never tear mid-wave on a MemoryError.
                 self.pager.ensure(free[len(wave)], n_tok)
-            wave.append(self.queue.popleft())
+            wave.append(q.popleft())
         if not wave:
             return
         if self.admission == "prefill":
@@ -694,7 +832,9 @@ class ServingEngine:
             self._adapter_ids[slot] = wave_ids[row]
             tok = int(first[row])
             self._last_token[slot] = tok
+            self._fresh[slot] = True
             req.output.append(tok)
+            self._note_first_token(req)
         self._update_gauges()
 
     def _insert_wave(self, slot_ids, wave_cache, lengths) -> None:
@@ -781,7 +921,9 @@ class ServingEngine:
         self._lengths[slot] = len(tokens)
         self._adapter_ids[slot] = st["aid"]
         self._last_token[slot] = tok
+        self._fresh[slot] = True
         req.output.append(tok)
+        self._note_first_token(req)
         self._chunking = None
         self._update_gauges()
 
@@ -818,68 +960,90 @@ class ServingEngine:
                         logits[slot, 0, : self.cfg.vocab_size]
                     ))
                     self._last_token[slot] = nxt
+                    self._fresh[slot] = True
                     req.output.append(nxt)
+                    self._note_first_token(req)
 
     def _preempt(self, slot: int) -> None:
         """Recompute-style preemption (vLLM): free the slot's blocks and
         push the request back to the queue FRONT — it re-admits later
         with ``prompt + output`` as its prefill prefix, which continues
-        the greedy stream exactly where it stopped."""
+        the greedy stream exactly where it stopped.  ``requeue_hook``
+        (the SLA front end) redirects the requeue into its class queues;
+        either way the SAME ``Request`` object is reused, so
+        ``arrival_time`` / ``latency_class`` / the generated prefix all
+        survive preemption."""
         req = self.slots[slot]
         self.slots[slot] = None
         self._adapter_ids[slot] = 0
         self.pager.release(slot)
-        self.queue.appendleft(req)
+        (self.requeue_hook or self.queue.appendleft)(req)
         self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
 
     # ----------------------------------------------------------------- tick
-    def step(self) -> None:
-        self._admit()
-        active = np.array([r is not None for r in self.slots])
-        if not active.any():
-            return
-        if self._paged:
-            # alloc-on-append: the incoming token may cross a block
-            # boundary.  When the pool is exhausted mid-decode, preempt
-            # the highest slot that still needs growth — its blocks free
-            # immediately, the remaining slots keep decoding this tick,
-            # and the victim resumes by re-prefilling its prefix.
-            for i in range(self.n_slots):
-                if not active[i]:
-                    continue
-                try:
+    def _ensure_growth(self, active: np.ndarray) -> None:
+        """Paged alloc-on-append: the incoming token may cross a block
+        boundary, so every active slot's arena must hold one more token
+        before the decode dispatch.  When an arena is exhausted, preempt
+        a victim among the ACTIVE slots sharing it — ``victim_hook`` (the
+        SLA scheduler's class/arrival-aware pick) or the highest such
+        slot by default (vLLM-style).  Victims' blocks free immediately,
+        the remaining slots keep decoding this tick, and the victim
+        resumes by re-prefilling its prefix.  ``active`` is updated in
+        place as victims are evicted."""
+        for i in range(self.n_slots):
+            if not active[i]:
+                continue
+            try:
+                self.pager.ensure(i, int(self._lengths[i]) + 1)
+            except MemoryError:
+                # the victim must share slot i's block arena (under a
+                # mesh each data shard allocates from its own arena)
+                # and always frees >= 1 block there (an active slot
+                # holds at least its prompt's first block), so the
+                # retried ensure (one extra block) cannot fail —
+                # worst case the victim is slot i itself.
+                shard = self.pager.shard_of(i)
+                cands = [
+                    j for j in range(self.n_slots)
+                    if active[j] and self.pager.shard_of(j) == shard
+                ]
+                victim = (
+                    self.victim_hook(cands, self.slots)
+                    if self.victim_hook is not None else max(cands)
+                )
+                self._preempt(victim)
+                active[victim] = False
+                if active[i]:                    # victim was not i
                     self.pager.ensure(i, int(self._lengths[i]) + 1)
-                except MemoryError:
-                    # the victim must share slot i's block arena (under a
-                    # mesh each data shard allocates from its own arena)
-                    # and always frees >= 1 block there (an active slot
-                    # holds at least its prompt's first block), so the
-                    # retried ensure (one extra block) cannot fail —
-                    # worst case the victim is slot i itself.
-                    shard = self.pager.shard_of(i)
-                    for victim in range(self.n_slots - 1, i - 1, -1):
-                        if active[victim] and \
-                                self.pager.shard_of(victim) == shard:
-                            self._preempt(victim)
-                            active[victim] = False
-                            break
-                    if active[i]:                    # victim was not i
-                        self.pager.ensure(i, int(self._lengths[i]) + 1)
-            if not active.any():
-                return
-        toks = jnp.asarray(self._last_token.reshape(-1, 1))
-        # paged: inactive/preempted slots write into the null block
+
+    def dispatch_decode(self, toks, active: np.ndarray):
+        """Dispatch ONE fused decode step for the full slot batch and
+        return the (B, 1, V) logits (a device future — JAX async
+        dispatch).  ``toks`` is the (B, 1) int32 token batch; ``active``
+        masks which slots' cache stripes the eager merge keeps (paged
+        pools skip the merge: inactive slots write the null block).  The
+        caller overlaps host work with the device step — the async front
+        end even dispatches the NEXT tick from device-resident sampled
+        tokens before this one's logits land."""
         logits, new_cache = self._decode(*self._decode_args(toks))
         self.stats["decode_calls"] += 1
         self.cache = merge_cache_slots(
             self.spec, new_cache, self.cache, active,
             skip_paged=self._paged,
         )
-        nxt = np.asarray(
-            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1), np.int32  # repro: allow(host-jnp) greedy sampling: one argmax+D2H per tick is the sampler, not a leak
-        )
+        # anything admission stamped before this dispatch is now on device
+        self._fresh[:] = False
+        return logits
+
+    def _postprocess(self, nxt: np.ndarray, active: np.ndarray) -> None:
+        """Land one tick's sampled tokens: append to outputs, advance
+        lengths, complete/free slots on EOS / token budget / max_len.
+        ``active`` is the DISPATCH-TIME mask of that tick — the front
+        end lands a tick one dispatch late, after newer requests were
+        admitted into slots the mask excludes."""
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not active[i]:
                 continue
             tok = int(nxt[i])
             req.output.append(tok)
@@ -895,6 +1059,22 @@ class ServingEngine:
                     self.pager.release(i)   # free-on-eviction
         if self._paged:
             self._update_gauges()
+
+    def step(self) -> None:
+        t0 = self.clock()
+        self._admit()
+        active = np.array([r is not None for r in self.slots])
+        if not active.any():
+            return
+        if self._paged:
+            self._ensure_growth(active)
+            if not active.any():
+                return
+        toks = jnp.asarray(self._last_token.reshape(-1, 1))
+        logits = self.dispatch_decode(toks, active)
+        nxt = np.asarray(self._sample(logits))[:, 0]
+        self._postprocess(nxt, active)
+        self.tick_hist.record(max(self.clock() - t0, 0.0))
         if sanitize.enabled():
             self.compile_guard.assert_ok()
 

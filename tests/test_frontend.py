@@ -1,0 +1,332 @@
+"""Async serving front end: scheduler determinism, streaming, SLA queues.
+
+The load-bearing invariant: greedy per-request outputs are
+**scheduling-independent** (slots are batch-independent, preemption
+resumes recompute-exact), so the front end's EDF admission order,
+double-buffered chained dispatches, and SLA-aware preemption must all
+produce token-for-token what the closed-loop ``ServingEngine.run()``
+produces for the same requests — across every model family, dense and
+paged caches, and mixed adapter tenants.  Everything here runs under
+the compile guard's documented bounds (the front end registers its
+``merge_toks`` jit like any other entry point).
+"""
+
+import asyncio
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_peft, get_smoke
+from repro.core.bank import AdapterBank
+from repro.core.peft import PeftConfig, attach
+from repro.models import build_model
+from repro.serve import (
+    DEFAULT_CLASSES,
+    InterleavePolicy,
+    LatencyHistogram,
+    Request,
+    ServeFrontend,
+    ServingEngine,
+    SLAClass,
+    SLAScheduler,
+    VirtualClock,
+    poisson_arrivals,
+)
+
+PROMPTS = [[5, 9, 13], [40, 2], [7, 7, 7, 7, 21, 3, 99], [100, 101],
+           [1], [13, 5, 88, 4, 2], [250, 3, 17], [9] * 11]
+MAX_NEW = 5
+
+
+def _build(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(arrivals=None, prompts=PROMPTS, tenants=None):
+    reqs = []
+    for i, p in enumerate(prompts):
+        reqs.append(Request(
+            uid=i, prompt=list(p), max_new_tokens=MAX_NEW,
+            arrival_time=float(arrivals[i]) if arrivals is not None else None,
+            latency_class="interactive" if i % 2 == 0 else "batch",
+            adapter=tenants[i % len(tenants)] if tenants else None,
+        ))
+    return reqs
+
+
+def _closed_loop(model, params, prompts=PROMPTS, tenants=None, **kw):
+    engine = ServingEngine(model, params, n_slots=3, max_len=64, **kw)
+    reqs = _requests(prompts=prompts, tenants=tenants)
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert all(r.done for r in reqs)
+    return {r.uid: r.output for r in reqs}
+
+
+def _open_loop(model, params, prompts=PROMPTS, tenants=None, rate=200.0,
+               seed=0, **kw):
+    """Seeded Poisson arrivals through the front end on a virtual clock."""
+    engine = ServingEngine(model, params, n_slots=3, max_len=64, **kw)
+    engine.clock = VirtualClock()
+    fe = ServeFrontend(engine)
+    arrivals = poisson_arrivals(
+        np.random.default_rng(seed), rate, len(prompts)
+    )
+    reqs = _requests(arrivals=arrivals, prompts=prompts, tenants=tenants)
+    streams = [fe.submit(r) for r in reqs]
+    fe.drain()
+    assert all(r.done for r in reqs)
+    engine.compile_guard.assert_ok()
+    return {r.uid: r.output for r in reqs}, fe, streams, reqs
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b",
+                                  "mamba2-1.3b"])
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+def test_frontend_matches_closed_loop(arch, cache):
+    """Seeded open-loop arrivals through the SLA front end (EDF admission
+    across two latency classes, double-buffered chained dispatch) are
+    token-for-token identical to the closed-loop engine."""
+    if cache == "paged" and arch == "mamba2-1.3b":
+        pytest.skip("mamba2 has no pageable leaves (degenerates to dense)")
+    model, params = _build(arch)
+    kw = dict(cache=cache, block_size=8) if cache == "paged" else {}
+    ref = _closed_loop(model, params, **kw)
+    out, fe, streams, _ = _open_loop(model, params, **kw)
+    assert out == ref
+    # the double buffer actually engaged (not every tick fell back)
+    assert fe.stats["chained"] > 0
+    # streams delivered exactly the landed outputs
+    for s in streams:
+        assert s.closed and s.tokens == ref[s.request.uid]
+        assert len(s.token_times) == len(s.tokens)
+
+
+def test_frontend_mixed_tenants_matches_closed_loop():
+    """EDF scheduling over a multi-tenant AdapterBank batch (QuanTA +
+    LoRA + base interleaved in the same decode waves)."""
+    arch = "qwen2-0.5b"
+    model, params = _build(arch)
+    targets = get_peft(arch).targets
+    qbase, qset = attach(
+        jax.random.PRNGKey(1), params,
+        PeftConfig(method="quanta", scheme=None, n_axes=3,
+                   noise_scale=0.3, targets=targets),
+    )
+    _, lset = attach(
+        jax.random.PRNGKey(2), params,
+        PeftConfig(method="lora", rank=4, targets=targets),
+    )
+    bank = AdapterBank.build(params, {"qa": (qbase, qset), "lo": lset})
+    tenants = ["qa", "lo", None]
+    for cache_kw in ({}, dict(cache="paged", block_size=8)):
+        ref = _closed_loop(model, params, tenants=tenants,
+                           adapters=bank, **cache_kw)
+        out, fe, _, _ = _open_loop(model, params, tenants=tenants,
+                                   adapters=bank, **cache_kw)
+        assert out == ref
+        assert fe.stats["chained"] > 0
+
+
+def test_frontend_chunked_prefill_interleave():
+    """The interleave policy drives chunked admission (bursts instead of
+    the engine's fixed one-chunk-per-tick) without changing outputs."""
+    model, params = _build("qwen2-0.5b")
+    prompts = [[3] * 40, [5, 9, 13], [7] * 33, [40, 2], [9] * 21]
+    kw = dict(prefill_chunk=8)
+    ref = _closed_loop(model, params, prompts=prompts, **kw)
+    out, fe, _, _ = _open_loop(model, params, prompts=prompts, **kw)
+    assert out == ref
+    assert fe.engine.stats["chunk_calls"] > 0
+
+
+def test_streaming_is_incremental():
+    """Tokens surface on the stream as their tick lands — not all at the
+    end: after the first tick every admitted request has streamed exactly
+    its prefill token and is not done."""
+    model, params = _build("qwen2-0.5b")
+    engine = ServingEngine(model, params, n_slots=3, max_len=64)
+    engine.clock = VirtualClock()
+    fe = ServeFrontend(engine)
+    reqs = _requests(prompts=PROMPTS[:3])
+    streams = [fe.submit(r) for r in reqs]
+    fe.tick()
+    for s in streams:
+        assert len(s.tokens) == 1 and not s.done
+    fe.drain()
+    for s in streams:
+        assert s.done and len(s.tokens) == MAX_NEW
+        # blocking iteration drains the queued tokens then terminates
+        assert list(s) == s.tokens
+
+
+def test_streams_consume_from_worker_thread():
+    """The intended deployment shape: the front end runs in a worker
+    thread, consumers block on their streams."""
+    model, params = _build("qwen2-0.5b")
+    engine = ServingEngine(model, params, n_slots=2, max_len=64)
+    fe = ServeFrontend(engine)
+    reqs = _requests(prompts=PROMPTS[:4])
+    streams = [fe.submit(r) for r in reqs]
+    worker = threading.Thread(target=fe.drain)
+    worker.start()
+    outs = [s.result() for s in streams]
+    worker.join(timeout=120)
+    assert not worker.is_alive()
+    assert outs == [r.output for r in reqs]
+    assert all(len(o) == MAX_NEW for o in outs)
+
+
+def test_async_serve_drains_streams():
+    """``serve()`` + ``async for`` interleave on one event loop."""
+    model, params = _build("qwen2-0.5b")
+    engine = ServingEngine(model, params, n_slots=2, max_len=64)
+    engine.clock = VirtualClock()
+    fe = ServeFrontend(engine)
+    reqs = _requests(prompts=PROMPTS[:3])
+    streams = [fe.submit(r) for r in reqs]
+
+    async def consume(stream):
+        return [tok async for tok in stream]
+
+    async def main():
+        server = asyncio.create_task(fe.serve())
+        outs = await asyncio.gather(*(consume(s) for s in streams))
+        await server
+        return list(outs)
+
+    outs = asyncio.run(main())
+    assert outs == [r.output for r in reqs]
+
+
+def test_preemption_preserves_sla_fields():
+    """An under-provisioned paged pool forces preemption through the SLA
+    victim hook; the preempted request requeues as the SAME object
+    (arrival_time / latency_class / generated prefix intact) and final
+    outputs still match the closed loop."""
+    model, params = _build("qwen2-0.5b")
+    prompts = [[3] * 10, [7] * 10]
+    ref = _closed_loop(model, params, prompts=prompts)  # dense reference
+    engine = ServingEngine(model, params, n_slots=2, max_len=64,
+                           cache="paged", block_size=4, n_blocks=7)
+    engine.clock = VirtualClock()
+    fe = ServeFrontend(engine)
+    reqs = _requests(prompts=prompts)
+    for r in reqs:
+        fe.submit(r)
+    # submit stamps arrival_time; preemption must not re-stamp either field
+    stamps = [(r.arrival_time, r.latency_class) for r in reqs]
+    fe.drain()
+    assert engine.stats["preemptions"] > 0
+    assert {r.uid: r.output for r in reqs} == ref
+    assert [(r.arrival_time, r.latency_class) for r in reqs] == stamps
+
+
+def test_frontend_validation():
+    model, params = _build("mamba2-1.3b")
+    engine = ServingEngine(model, params, n_slots=2, max_len=64,
+                           admission="replay")
+    with pytest.raises(ValueError, match="prefill admission"):
+        ServeFrontend(engine)
+    engine2 = ServingEngine(model, params, n_slots=2, max_len=64)
+    fe = ServeFrontend(engine2)
+    fe.submit(Request(uid=0, prompt=[1, 2]))
+    with pytest.raises(ValueError, match="already in flight"):
+        fe.submit(Request(uid=0, prompt=[3]))
+    with pytest.raises(ValueError, match="unknown latency class"):
+        fe.submit(Request(uid=1, prompt=[1], latency_class="bulk"))
+
+
+# ------------------------------------------------- scheduler unit tests
+
+def _req(uid, arrival, cls="interactive"):
+    return Request(uid=uid, prompt=[1], arrival_time=arrival,
+                   latency_class=cls)
+
+
+def test_scheduler_edf_across_classes():
+    """interactive (250ms target) outranks batch (2.5s) at equal arrival,
+    but an old-enough batch request wins EDF — no starvation."""
+    s = SLAScheduler()
+    s.submit(_req(0, 1.0, "batch"))
+    s.submit(_req(1, 1.0, "interactive"))
+    s.submit(_req(2, 1.2, "interactive"))
+    view = s.view(now=10.0)
+    assert [view.popleft().uid for _ in range(3)] == [1, 2, 0]
+    # batch deadline 1.0+2.5 beats an interactive arriving at 3.5 (+0.25)
+    s.submit(_req(3, 1.0, "batch"))
+    s.submit(_req(4, 3.5, "interactive"))
+    assert s.view(10.0).popleft().uid == 3
+
+
+def test_scheduler_arrival_gating_and_requeue():
+    s = SLAScheduler()
+    s.submit(_req(0, 5.0))
+    assert not s.has_ready(4.9) and s.pending()
+    assert s.ready_count(4.9) == 0 and s.next_arrival() == 5.0
+    assert s.has_ready(5.0)
+    assert not s.view(4.9)
+    with pytest.raises(IndexError):
+        s.view(4.9).popleft()
+    # preemption requeues at the FRONT of the class queue
+    s.submit(_req(1, 6.0))
+    s.requeue(_req(2, 5.5))
+    assert s.view(10.0).popleft().uid == 2
+    assert s.depths() == {"interactive": 2, "batch": 0}
+
+
+def test_scheduler_victim_selection():
+    """Victims: lowest-priority class first, then latest arrival, then
+    highest slot — restricted to the candidate (same-arena) slots."""
+    s = SLAScheduler()
+    slots = [_req(0, 1.0, "interactive"), _req(1, 9.0, "interactive"),
+             _req(2, 0.5, "batch"), _req(3, 0.1, "batch")]
+    assert s.pick_victim([0, 1, 2, 3], slots) == 2   # batch, latest arrival
+    assert s.pick_victim([0, 1], slots) == 1         # latest interactive
+    assert s.pick_victim([3], slots) == 3
+    with pytest.raises(ValueError):
+        SLAScheduler([])
+    with pytest.raises(ValueError):
+        SLAScheduler([SLAClass("a", 0, 1.0), SLAClass("a", 1, 2.0)])
+    with pytest.raises(ValueError, match="unknown latency class"):
+        s.submit(_req(9, 0.0, "bulk"))
+
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    assert h.percentile(50) == 0.0 and h.mean == 0.0
+    for v in [1e-4] * 99 + [1.0]:
+        h.record(v)
+    assert h.count == 100 and h.max == 1.0
+    # p50 lands in the 1e-4 bucket (geometric midpoint, <=41% rel error)
+    assert 0.5e-4 <= h.percentile(50) <= 2e-4
+    assert h.percentile(99.5) >= 0.5
+    d = h.to_dict()
+    assert d["count"] == 100 and d["max_s"] == 1.0
+
+
+def test_poisson_arrivals_deterministic():
+    a = poisson_arrivals(np.random.default_rng(7), 100.0, 50, start=2.0)
+    b = poisson_arrivals(np.random.default_rng(7), 100.0, 50, start=2.0)
+    assert np.array_equal(a, b)
+    assert a.shape == (50,) and a[0] >= 2.0
+    assert np.all(np.diff(a) > 0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(np.random.default_rng(0), 0.0, 5)
+
+
+def test_interleave_policy():
+    p = InterleavePolicy()
+    assert p.chunk_steps(decoding=False, priority=1) == p.idle_burst
+    assert p.chunk_steps(decoding=True, priority=0) == p.urgent_burst
+    assert p.chunk_steps(decoding=True, priority=1) == p.busy_burst
+    assert p.chunk_steps(decoding=True, priority=None) == p.busy_burst
+    clock = VirtualClock(1.0)
+    assert clock() == 1.0 and clock.advance(0.5) == 1.5 and clock() == 1.5
+    assert [c.name for c in DEFAULT_CLASSES] == ["interactive", "batch"]
