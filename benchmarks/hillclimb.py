@@ -71,6 +71,12 @@ VARIANTS = {
               cfg_overrides={"attn_backend": "pallas",
                              "kv_cache": "paged",
                              "base_quant": "nf4"})),
+        ("B7_nf4_kv_decode", "minicpm-2b", "decode_32k",
+         dict(decode_shardings=True,
+              cfg_overrides={"attn_backend": "pallas",
+                             "kv_cache": "paged",
+                             "base_quant": "nf4",
+                             "kv_quant": "nf4"})),
     ],
     "C": [
         ("C0_baseline", "mixtral-8x7b", "train_4k", {}),

@@ -21,6 +21,13 @@ compiles):
   dequant-matmul path: rows report tokens/sec plus the per-host
   ``param_bytes`` gauge next to the fp engine's, and the two quantized
   engines are asserted token-for-token identical,
+* **quantized KV cache** (``kv_quant="nf4" | "int8"``, transformer and
+  griffin — mamba2 has no pageable leaves) — the paged engine over
+  packed-code + per-block-scale pools, asserted token-for-token
+  identical to the dense engine on the same model (whose stripes hold
+  fake-quantized values through the same ``core.quantize`` helpers):
+  rows report tokens/sec plus the per-block pool bytes next to the fp
+  paged engine's (the KV-stream cut),
 * **sharded engine** (``--sharded``) — the same dense/paged engines on a
   2x`data` . 4x`model` mesh over 8 virtual CPU devices
   (``ServingEngine(mesh=...)``): rows report per-host cache bytes and
@@ -59,16 +66,18 @@ CSV rows via ``benchmarks.common.csv_row``:
 ``serve_admission_<family>_<mode>, <us per admitted wave>, <derived>``,
 ``serve_cache_<family>_<dense|paged>, <us per admitted wave>, <derived>``,
 ``serve_quant_<family>_nf4_<dense|paged>, ...``,
+``serve_kvquant_<family>_<nf4|int8>, ...``,
 ``serve_adapters_<family>_<single|pallas|bank8|merged>, ...``,
 ``serve_sharded_<family>_<dense|paged>, ...`` and
 ``serve_openloop_<family>_<dense|paged>_<class|engine>, <ttft p50 us>,
 <derived>``.
 
 ``--smoke`` (CI gate) runs the transformer family only, with the paged
-vs dense, quantized-base (nf4 dense vs paged), multi-adapter (bank8 /
-pallas / merged vs single), open-loop vs closed-loop
-(``--open-loop``), and — with ``--sharded`` — sharded vs
-single-device equivalence assertions intact.
+vs dense, quantized-base (nf4 dense vs paged), quantized-KV (nf4 and
+int8 paged vs dense fake-quantized), multi-adapter (bank8 / pallas /
+merged vs single), open-loop vs closed-loop (``--open-loop``), and —
+with ``--sharded`` — sharded vs single-device equivalence assertions
+intact.
 """
 
 from __future__ import annotations
@@ -172,6 +181,8 @@ def bench_family(family: str, arch: str, sharded: bool = False):
     cache_rows, dense_outs = bench_cache_modes(family, model, params)
     rows.extend(cache_rows)
     rows.extend(bench_quantized_base(family, model, params))
+    if family != "mamba2":       # no pageable leaves: kv_quant is a no-op
+        rows.extend(bench_kvquant_cache(family, cfg, params))
     rows.extend(bench_adapter_modes(family, arch, cfg, model, params))
     if sharded:
         rows.extend(bench_sharded(family, model, params, dense_outs))
@@ -240,6 +251,54 @@ def bench_quantized_base(family: str, model, params):
     assert outs["paged"] == outs["dense"], (
         f"{family}: quantized paged cache diverged from dense"
     )
+    return rows
+
+
+def bench_kvquant_cache(family: str, cfg, params):
+    """Quantized KV-cache blocks (``kv_quant="nf4" | "int8"``) under
+    prefill admission: the paged pool stores packed codes + per-block
+    scales, and its outputs must be token-for-token IDENTICAL to the
+    dense engine over the same model (whose stripes hold fake-quantized
+    values through the same ``core.quantize`` helpers) — the
+    quantized-KV CI gate.  Rows report tokens/sec plus the per-block
+    pool bytes next to the fp paged engine's (the KV-stream cut the
+    roofline's ``quantized_kv_adjustment`` models)."""
+    fp_engine = ServingEngine(
+        build_model(cfg), params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        admission="prefill", cache="paged", block_size=BLOCK_SIZE,
+    )
+    fp_block_bytes = fp_engine.pager._bytes_per_block
+    rows = []
+    for fmt in ("nf4", "int8"):
+        qmodel = build_model(cfg.replace(kv_quant=fmt))
+        outs, kept = {}, None
+        for mode in ("dense", "paged"):
+            engine = ServingEngine(
+                qmodel, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                admission="prefill", cache=mode, block_size=BLOCK_SIZE,
+                kv_quant=fmt,
+            )
+            _run_wave(engine, _prompts(N_SLOTS, seed=1))      # warmup/compile
+            admit_s, _calls, toks, total_s, outs[mode] = _run_wave(
+                engine, _prompts(N_SLOTS, seed=2), uid0=100
+            )
+            if mode == "paged":
+                kept = (engine, admit_s, toks, total_s)
+        assert outs["paged"] == outs["dense"], (
+            f"{family}: {fmt} quantized paged KV diverged from the dense "
+            "fake-quantized reference"
+        )
+        engine, admit_s, toks, total_s = kept
+        q_block_bytes = engine.pager._bytes_per_block
+        rows.append(csv_row(
+            f"serve_kvquant_{family}_{fmt}",
+            admit_s * 1e6,
+            f"toks/s={toks / total_s:.0f} "
+            f"block_bytes={q_block_bytes:.0f} "
+            f"fp_block_bytes={fp_block_bytes:.0f} "
+            f"cut={fp_block_bytes / max(q_block_bytes, 1.0):.2f}x "
+            f"kv_quant={engine.stats['kv_quant']}",
+        ))
     return rows
 
 

@@ -472,6 +472,51 @@ def _build_paged_decode():
     ])
 
 
+# Dequant-in-VMEM paged decode (kv_quant): operands after the two int32
+# scalar-prefetch arrays are q (0), packed K codes, K scales, packed V
+# codes, V scales [, the (1, 16) nf4 codebook] — outputs match q, the
+# code+scale pools gather through the SAME table index maps as the fp
+# kernel, and the online-softmax scratch contract is unchanged.
+@register_kernel("paged_decode_quant")
+def _build_paged_decode_quant():
+    from repro.core.quantize import quantize_kv
+    from repro.kernels.flash_attention import paged_flash_decode_attention
+
+    def run(b, n_pool, bs, kv, hd, h, alloc, fmt, qb, dtype=jnp.bfloat16):
+        max_b = max(alloc)
+        tables = np.zeros((b, max_b), np.int32)
+        nxt = 1                                  # row 0 = the null block
+        lens = np.zeros((b,), np.int32)
+        for slot, n in enumerate(alloc):
+            rows = list(range(nxt, nxt + n))
+            nxt += n
+            tables[slot, :n] = rows
+            tables[slot, n:] = rows[-1] if rows else 0
+            lens[slot] = max(1, n * bs - bs // 2)
+        q = jnp.zeros((b, 1, h, hd), dtype)
+        kc, ks = quantize_kv(jnp.zeros((n_pool, bs, kv, hd)), fmt,
+                             block_size=qb)
+        vc, vs = quantize_kv(jnp.zeros((n_pool, bs, kv, hd)), fmt,
+                             block_size=qb)
+        return lambda: paged_flash_decode_attention(
+            q, kc, vc, jnp.asarray(tables), jnp.asarray(lens),
+            kv_quant=fmt, k_scales=ks, v_scales=vs, quant_block=qb,
+            value_dtype=dtype, interpret=True,
+        )
+
+    return _capture_cases([
+        # nf4 at the default block 64 (one scale block per row)
+        ("nf4_gqa_pool32", run(4, 32, 16, 2, 64, 14, (6, 3, 1, 6),
+                               "nf4", 64)),
+        # remainder scale block: hd=80 with quant_block=64 -> 2 blocks,
+        # the second covering only 16 of 64 elements
+        ("nf4_hd80_remainder", run(2, 16, 16, 4, 80, 8, (7, 2),
+                                   "nf4", 64)),
+        # int8 keeps head_dim at int8 dtype; small quant_block remainder
+        ("int8_bs16", run(2, 16, 16, 8, 24, 8, (7, 2), "int8", 16)),
+    ])
+
+
 def _demo_adapter(d: int, dims, dtype):
     from repro.core.quanta import QuantaAdapter
 

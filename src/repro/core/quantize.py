@@ -58,7 +58,10 @@ __all__ = [
     "dequantize",
     "ensure_dense",
     "expand_scales",
+    "fake_quantize_kv",
+    "kv_dequant_values",
     "matmul_ref",
+    "quantize_kv",
     "quantize_linear",
     "quantize_params",
     "quantized_nbytes",
@@ -345,6 +348,86 @@ def ensure_dense(w, dtype: Any = None):
     if isinstance(w, QuantizedLinear):
         return dequantize(w, dtype)
     return w
+
+
+# ---------------------------------------------------------------------------
+# KV-cache row quantization (serve.paging quantized pools)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(
+    x: jnp.ndarray, fmt: str, *, block_size: int = 64
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise-quantize KV rows along the LAST axis (head_dim).
+
+    Per-token-row granularity: absmax blocks of ``block_size`` elements
+    run along ``head_dim`` only, never spanning tokens — so quantizing a
+    committed pool stripe, a single decode token, and a dense cache row
+    all produce identical codes for identical rows (the property the
+    paged-vs-dense-fake-quantized equality gate rests on).
+
+    Returns ``(codes, scales)``: NF4 packs two 4-bit codes per byte
+    along the last axis (``uint8 (..., d//2)``, high nibble = even
+    element — the same nibble convention as :class:`QuantizedLinear`);
+    int8 keeps ``int8 (..., d)``.  Scales are fp32
+    ``(..., ceil(d/block_size))``.
+    """
+    if fmt not in ("nf4", "int8"):
+        raise ValueError(f"unknown quantization format {fmt!r}")
+    d = x.shape[-1]
+    x32 = jnp.asarray(x, jnp.float32)
+    if fmt == "nf4":
+        if d % 2:
+            raise ValueError(
+                f"NF4 packs two codes per byte along head_dim; d={d} "
+                "must be even"
+            )
+        scales = blockwise_scales(x32, block_size, axis=-1, levels=1.0)
+        v = x32 / expand_scales(scales, block_size, d, axis=-1)
+        codes = jnp.searchsorted(
+            jnp.asarray(_NF4_BOUNDS), jnp.clip(v, -1.0, 1.0), side="right"
+        ).astype(jnp.uint8)
+        packed = ((codes[..., 0::2] << 4) | codes[..., 1::2]).astype(
+            jnp.uint8
+        )
+    else:
+        scales = blockwise_scales(x32, block_size, axis=-1, levels=127.0)
+        packed = blockwise_round(
+            x32, scales, block_size, axis=-1, levels=127
+        ).astype(jnp.int8)
+    return packed, scales.astype(jnp.float32)
+
+
+def kv_dequant_values(
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    fmt: str,
+    block_size: int,
+    d: int,
+    codebook: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Elementwise fp32 dequantization of KV rows quantized along the
+    last axis — :func:`dequant_values` applied through a trailing
+    singleton axis, so the reference gather path and the Pallas decode
+    kernel share the ONE dequant implementation with the weight paths
+    (the ISSUE's "same ``dequant_values`` feeds both paths" gate)."""
+    return dequant_values(
+        codes[..., None], scales[..., None], None, None,
+        fmt=fmt, block_size=block_size, d_in=d, codebook=codebook,
+    )[..., 0]
+
+
+def fake_quantize_kv(
+    x: jnp.ndarray, fmt: str, *, block_size: int = 64
+) -> jnp.ndarray:
+    """Quantize-dequantize round trip at the input dtype: the dense
+    reference cache writes THIS, making dense decode token-for-token
+    comparable to the paged quantized pools (which store the same codes
+    and dequantize with the same :func:`dequant_values`)."""
+    codes, scales = quantize_kv(x, fmt, block_size=block_size)
+    return kv_dequant_values(
+        codes, scales, fmt=fmt, block_size=block_size, d=x.shape[-1]
+    ).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quantize import NF4_CODEBOOK, kv_dequant_values
 from repro.kernels.dispatch import MASK_VALUE, masked_softmax, resolve_interpret
 
 __all__ = [
@@ -612,6 +613,79 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         ).astype(o_ref.dtype)
 
 
+def _paged_decode_quant_kernel(bt_ref, len_ref, q_ref, kc_ref, ks_ref,
+                               vc_ref, vs_ref, *rest, bs: int, n_b: int,
+                               scale: float, window: Optional[int],
+                               fmt: str, quant_block: int, hd: int,
+                               value_dtype):
+    """Paged decode with dequant-in-VMEM: the gathered KV tiles are packed
+    codes + per-block scales; each visited block dequantizes through THE
+    shared ``core.quantize`` elementwise decode (``kv_dequant_values``)
+    before the online-softmax step — fp cache rows never exist in HBM.
+    NF4 carries its codebook as a ``(1, 16)`` operand (a kernel body
+    cannot capture host constants)."""
+    if fmt == "nf4":
+        cb_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+        cb_ref = None
+    b = pl.program_id(0)
+    j = pl.program_id(2)                                   # logical block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    q_pos = length - 1
+    should = j * bs < length
+    if window is not None:
+        should &= (j + 1) * bs > q_pos - window + 1
+
+    @pl.when(should)
+    def _step():
+        q = q_ref[0, 0]                                    # (G, hd)
+        cb = cb_ref[...].reshape(-1) if cb_ref is not None else None
+        k = kv_dequant_values(
+            kc_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+            fmt=fmt, block_size=quant_block, d=hd, codebook=cb,
+        ).astype(value_dtype)                              # (bs, hd)
+        v = kv_dequant_values(
+            vc_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+            fmt=fmt, block_size=quant_block, d=hd, codebook=cb,
+        ).astype(value_dtype)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (G, bs)
+        kv_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < length
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_b - 1)
+    def _finalize():
+        denom = l_ref[:, :1]
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.where(denom == 0.0, 1.0, denom)
+        ).astype(o_ref.dtype)
+
+
 def paged_flash_decode_attention(
     q: jnp.ndarray,               # (B, 1, H, hd)
     k_pool: jnp.ndarray,          # (n_blocks, block_size, KV, hd)
@@ -622,6 +696,11 @@ def paged_flash_decode_attention(
     window: Optional[int] = None,
     softmax_scale: Optional[float] = None,
     interpret: Optional[bool] = None,
+    kv_quant: Optional[str] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
+    quant_block: int = 64,
+    value_dtype=None,
 ) -> jnp.ndarray:
     """Single-step flash attention over a paged KV pool.
 
@@ -631,6 +710,14 @@ def paged_flash_decode_attention(
     that layout) so skipped grid steps re-address a resident block.  The
     block size is the pool's — no ``block_k`` knob; serving picks it at
     cache construction.  Returns ``(B, 1, H, hd)``.
+
+    ``kv_quant`` ("nf4" | "int8") switches to the dequant-in-VMEM
+    variant: ``k_pool``/``v_pool`` hold packed codes
+    (``core.quantize.quantize_kv`` layout — uint8 with head_dim halved
+    for nf4, int8 otherwise), ``k_scales``/``v_scales`` the per-block
+    fp32 absmax scale pools; both gather through the same table index
+    maps and each visited block dequantizes in VMEM, cast to
+    ``value_dtype`` (default: the query dtype).
     """
     b, q_len, h, hd = q.shape
     if q_len != 1:
@@ -642,6 +729,53 @@ def paged_flash_decode_attention(
     qg = q.reshape(b, kv, g, hd)
     lens = cache_len.reshape(b).astype(jnp.int32)
     tables = block_tables.astype(jnp.int32)
+
+    scratch_shapes = [
+        pltpu.VMEM((g, _STATS_LANES), jnp.float32),
+        pltpu.VMEM((g, _STATS_LANES), jnp.float32),
+        pltpu.VMEM((g, hd), jnp.float32),
+    ]
+    if kv_quant is not None:
+        if k_scales is None or v_scales is None:
+            raise ValueError("kv_quant needs k_scales and v_scales")
+        hd_c = k_pool.shape[3]       # hd//2 packed (nf4) or hd (int8)
+        nsb = k_scales.shape[3]      # scale blocks per row
+        pool_spec = pl.BlockSpec(
+            (1, bs, 1, hd_c), lambda b_, k_, j, bt, ln: (bt[b_, j], 0, k_, 0)
+        )
+        scale_spec = pl.BlockSpec(
+            (1, bs, 1, nsb), lambda b_, k_, j, bt, ln: (bt[b_, j], 0, k_, 0)
+        )
+        in_specs = [
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b_, k_, j, bt, ln: (b_, k_, 0, 0)),
+            pool_spec, scale_spec, pool_spec, scale_spec,
+        ]
+        operands = [tables, lens, qg, k_pool, k_scales, v_pool, v_scales]
+        if kv_quant == "nf4":
+            in_specs.append(
+                pl.BlockSpec((1, 16), lambda b_, k_, j, bt, ln: (0, 0))
+            )
+            operands.append(jnp.asarray(NF4_CODEBOOK).reshape(1, 16))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,    # block tables, per-slot lengths
+            grid=(b, kv, n_b),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b_, k_, j, bt, ln: (b_, k_, 0, 0)),
+            scratch_shapes=scratch_shapes,
+        )
+        out = pl.pallas_call(
+            functools.partial(
+                _paged_decode_quant_kernel, bs=bs, n_b=n_b, scale=scale,
+                window=window, fmt=kv_quant, quant_block=quant_block,
+                hd=hd, value_dtype=value_dtype or q.dtype,
+            ),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+            interpret=resolve_interpret(interpret),
+        )(*operands)
+        return out.reshape(b, 1, h, hd)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,        # block tables, per-slot lengths
@@ -656,11 +790,7 @@ def paged_flash_decode_attention(
         ],
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda b_, k_, j, bt, ln: (b_, k_, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g, _STATS_LANES), jnp.float32),
-            pltpu.VMEM((g, _STATS_LANES), jnp.float32),
-            pltpu.VMEM((g, hd), jnp.float32),
-        ],
+        scratch_shapes=scratch_shapes,
     )
     out = pl.pallas_call(
         functools.partial(

@@ -100,6 +100,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         # roofline rebills the quantizable weight streams at packed bytes
         # (quantized_base_adjustment).
         cfg_lowered = cfg_lowered.replace(base_quant=None)
+    if getattr(cfg, "kv_quant", None) is not None:
+        # And again for quantized KV-cache blocks: the dequant-in-VMEM
+        # paged decode kernel is opaque, so lower the fp-cache program
+        # and let the roofline rebill the per-step KV gather at packed
+        # code+scale bytes (quantized_kv_adjustment).
+        cfg_lowered = cfg_lowered.replace(kv_quant=None)
     progs = build_programs(cfg_lowered, shape, dp_axes=dp)
 
     t0 = time.time()

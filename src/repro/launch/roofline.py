@@ -21,6 +21,7 @@ capacity-factor overhead.
 
 from __future__ import annotations
 
+import math
 import re
 from typing import Any, Dict, Optional
 
@@ -42,6 +43,7 @@ __all__ = [
     "attention_backend_adjustment",
     "paged_cache_adjustment",
     "quantized_base_adjustment",
+    "quantized_kv_adjustment",
 ]
 
 # TPU v5e per chip
@@ -320,7 +322,10 @@ def paged_cache_adjustment(
     b, s = shape.global_batch, shape.seq_len
     bs = cfg.kv_block_size
     dense_rows = s
-    paged_rows = min(s, -(-int(cfg.kv_occupancy * s) // bs) * bs)
+    # ceil the fractional token BEFORE ceil-to-block: int() truncation
+    # under-billed one whole block when occupancy * s sat just below a
+    # block boundary (e.g. occupancy * s = 16.0000004 with bs=16).
+    paged_rows = min(s, -(-math.ceil(cfg.kv_occupancy * s) // bs) * bs)
     dtype_bytes = int(np.dtype(cfg.param_dtype).itemsize)
     row_bytes = 2 * cfg.n_layers * cfg.kv_dim * dtype_bytes   # k + v
     return {
@@ -404,6 +409,58 @@ def quantized_base_adjustment(
     }
 
 
+def quantized_kv_adjustment(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Optional[Dict[str, float]]:
+    """Analytic decode KV-read swap for ``cfg.kv_quant``.
+
+    With quantized KV blocks (``kv_quant="nf4"|"int8"``) the paged pool
+    stores uint8 packed codes + per-block fp32 absmax scales and the
+    decode kernel dequantizes in VMEM — fp cache rows never exist in
+    HBM.  The dry-run lowers the fp program (``launch.dryrun`` strips
+    ``kv_quant`` before lowering, same convention as ``base_quant``), so
+    the paged KV gather is rebilled here at code+scale bytes:
+
+    * per-element fp bytes: ``itemsize(param_dtype)``,
+    * per-element quant bytes: ``0.5`` (nf4) / ``1.0`` (int8) plus the
+      amortized fp32 block scale ``4 / quant_block_size``.
+
+    Rows billed follow ``paged_cache_adjustment`` exactly (occupancy
+    ceiled to whole blocks), and like that adjustment the savings are
+    NOT divided by chips: the per-device decode program gathers the
+    full cache.  Only paged decode on attention families qualifies —
+    ssm has no KV leaves and the hybrid ring cache is window-bounded,
+    mirroring the paged adjustment's exclusions.
+    """
+    if cfg.kv_quant is None:
+        return None
+    if cfg.kv_quant not in ("nf4", "int8"):
+        raise ValueError(f"unknown kv_quant {cfg.kv_quant!r}")
+    if cfg.kv_cache != "paged" or shape.kind != "decode":
+        return None
+    if cfg.family in ("ssm", "hybrid"):
+        return None
+    if not 0.0 < cfg.kv_occupancy <= 1.0:
+        raise ValueError(f"kv_occupancy {cfg.kv_occupancy} outside (0, 1]")
+    b, s = shape.global_batch, shape.seq_len
+    bs = cfg.kv_block_size
+    paged_rows = min(s, -(-math.ceil(cfg.kv_occupancy * s) // bs) * bs)
+    fp_bytes = float(np.dtype(cfg.param_dtype).itemsize)
+    code_bytes = 0.5 if cfg.kv_quant == "nf4" else 1.0
+    q_bytes = code_bytes + 4.0 / cfg.quant_block_size  # fp32 block scales
+    n_elems = 2 * cfg.n_layers * cfg.kv_dim            # k + v per row
+    return {
+        "fmt": cfg.kv_quant,
+        "block_size": cfg.quant_block_size,
+        "paged_rows_per_slot": float(paged_rows),
+        "kv_read_bytes_fp": float(b * paged_rows * n_elems) * fp_bytes,
+        "kv_read_bytes_quant": float(b * paged_rows * n_elems) * q_bytes,
+        "kv_bytes_saved": float(b * paged_rows * n_elems)
+        * (fp_bytes - q_bytes),
+        "kv_stream_cut": fp_bytes / q_bytes,
+    }
+
+
 def roofline_terms(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -439,6 +496,11 @@ def roofline_terms(
         hlo_bytes_dev = max(
             0.0, hlo_bytes_dev - qadj["weight_bytes_saved"] / n_chips
         )
+    kvadj = quantized_kv_adjustment(cfg, shape)
+    if kvadj is not None:
+        # Paged KV gather billed at code+scale bytes.  NOT divided by
+        # chips — same per-device full-cache-gather convention as padj.
+        hlo_bytes_dev = max(0.0, hlo_bytes_dev - kvadj["kv_bytes_saved"])
     coll_per_device = float(sum(collective_bytes.values()))
     t_compute = hlo_flops_dev / HW["peak_flops"]
     t_memory = hlo_bytes_dev / HW["hbm_bw"]
@@ -459,6 +521,8 @@ def roofline_terms(
         "paged_adjustment": padj,
         "base_quant": cfg.base_quant,
         "quantized_adjustment": qadj,
+        "kv_quant": cfg.kv_quant,
+        "quantized_kv_adjustment": kvadj,
         "dominant": dominant.replace("_s", ""),
         "hlo_flops_per_device": hlo_flops_dev,
         "hlo_flops": hlo_flops_global,

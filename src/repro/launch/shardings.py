@@ -25,6 +25,12 @@ Strategy (DESIGN.md §5):
   never sharded (a block is the DMA unit of the paged decode kernel), and
   KV-heads/head_dim keep the model rule.  Block tables stay host-side and
   replicated — they are scalar-prefetch arguments, not cache state.
+  Quantized KV pools (``kv_quant``, see ``repro.serve.paging``) need no
+  extra rule: the packed-code pool and its ``<key>_qscale`` sibling both
+  carry ``PagedCacheLeafSpec`` entries, so the pool rule applies as-is —
+  DP on the block axis, model on a trailing dim only when it divides
+  (the nf4-halved head_dim or the small scale-block axis usually don't,
+  and fall back to replicated via the divisibility check).
 
 All rules are (regex over leaf path) -> PartitionSpec templates applied to
 the TRAILING dims, so the same rule covers scan-stacked ``(L, ...)`` and

@@ -32,6 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import kv_dequant_values
 from repro.kernels.dispatch import MASK_VALUE, masked_softmax
 from repro.kernels.flash_attention import (
     _block_attend,
@@ -168,7 +169,8 @@ def decode_attention(
 
 
 def _sharded_paged_flash(q, k_pool, v_pool, block_tables, cache_len,
-                         window, mesh):
+                         window, mesh, kv_quant=None, k_scales=None,
+                         v_scales=None, quant_block=64, value_dtype=None):
     """Run the paged flash-decode kernel per data shard under
     ``shard_map``.
 
@@ -202,11 +204,33 @@ def _sharded_paged_flash(q, k_pool, v_pool, block_tables, cache_len,
 
     local_rows = n_pool // d_total
 
-    def local_call(q_l, k_l, v_l, bt_l, len_l):
+    def local_shard():
         shard = jnp.int32(0)
         for ax in dp:
             shard = shard * sizes[ax] + jax.lax.axis_index(ax)
-        bt_local = bt_l - shard * local_rows   # arena-local pool rows
+        return shard
+
+    if kv_quant is not None:
+        # quantized pools: code + scale leaves ride along under the same
+        # DP partitioning as the fp pools they replace.
+        def local_call(q_l, k_l, ks_l, v_l, vs_l, bt_l, len_l):
+            bt_local = bt_l - local_shard() * local_rows
+            return paged_flash_decode_attention(
+                q_l, k_l, v_l, bt_local, len_l, window=window,
+                kv_quant=kv_quant, k_scales=ks_l, v_scales=vs_l,
+                quant_block=quant_block, value_dtype=value_dtype,
+            )
+
+        return shard_map(
+            local_call, mesh,
+            in_specs=(P(dp),) * 7,
+            out_specs=P(dp),
+            check_rep=False,
+        )(q, k_pool, k_scales, v_pool, v_scales,
+          block_tables.astype(jnp.int32), cache_len.astype(jnp.int32))
+
+    def local_call(q_l, k_l, v_l, bt_l, len_l):
+        bt_local = bt_l - local_shard() * local_rows   # arena-local rows
         return paged_flash_decode_attention(
             q_l, k_l, v_l, bt_local, len_l, window=window
         )
@@ -231,9 +255,23 @@ def paged_decode_attention(
     fast_softmax: bool = False,
     backend: str = "reference",
     mesh=None,
+    kv_quant: Optional[str] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
+    quant_block: int = 64,
+    value_dtype=None,
 ) -> jnp.ndarray:
     """Single-step attention over a paged KV pool.  Returns
     ``(B, 1, H, hd)``.
+
+    ``kv_quant`` ("nf4" | "int8") marks ``k_pool``/``v_pool`` as packed
+    code pools with per-block absmax scales in ``k_scales``/``v_scales``
+    (``core.quantize.quantize_kv`` layout, blocks of ``quant_block``
+    along head_dim).  The Pallas backend dequantizes gathered blocks in
+    VMEM; the reference path dequantizes the dense gathered view with
+    the same ``dequant_values`` and casts to ``value_dtype`` (default:
+    the query dtype) — matching what the dense fake-quantized cache
+    holds, so paged-quantized decode is token-for-token equal to it.
 
     ``backend="pallas"`` routes to the scalar-prefetch paged kernel whose
     index maps gather KV blocks through the block table (unallocated
@@ -251,15 +289,21 @@ def paged_decode_attention(
     engine only threads the mesh through when that holds.
     """
     _check_backend(backend)
+    if kv_quant is not None and (k_scales is None or v_scales is None):
+        raise ValueError("kv_quant needs k_scales and v_scales")
     if backend == "pallas":
         if mesh is not None:
             out = _sharded_paged_flash(
-                q, k_pool, v_pool, block_tables, cache_len, window, mesh
+                q, k_pool, v_pool, block_tables, cache_len, window, mesh,
+                kv_quant=kv_quant, k_scales=k_scales, v_scales=v_scales,
+                quant_block=quant_block, value_dtype=value_dtype,
             )
             if out is not None:
                 return out
         return paged_flash_decode_attention(
-            q, k_pool, v_pool, block_tables, cache_len, window=window
+            q, k_pool, v_pool, block_tables, cache_len, window=window,
+            kv_quant=kv_quant, k_scales=k_scales, v_scales=v_scales,
+            quant_block=quant_block, value_dtype=value_dtype,
         )
     b = q.shape[0]
     bs = k_pool.shape[1]
@@ -270,6 +314,21 @@ def paged_decode_attention(
     v_dense = v_pool[block_tables].reshape(
         b, n_b * bs, *v_pool.shape[2:]
     )
+    if kv_quant is not None:
+        hd = q.shape[3]
+        dt = value_dtype or q.dtype
+        k_dense = kv_dequant_values(
+            k_dense,
+            k_scales[block_tables].reshape(b, n_b * bs,
+                                           *k_scales.shape[2:]),
+            fmt=kv_quant, block_size=quant_block, d=hd,
+        ).astype(dt)
+        v_dense = kv_dequant_values(
+            v_dense,
+            v_scales[block_tables].reshape(b, n_b * bs,
+                                           *v_scales.shape[2:]),
+            fmt=kv_quant, block_size=quant_block, d=hd,
+        ).astype(dt)
     return decode_attention(
         q, k_dense, v_dense, cache_len, window=window,
         fast_softmax=fast_softmax, backend="reference",

@@ -19,6 +19,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import fake_quantize_kv, quantize_kv
+
 __all__ = [
     "ModelConfig",
     "ShapeConfig",
@@ -124,6 +126,16 @@ class ModelConfig:
     # head, norms, and raw-matmul projections stay dense.
     base_quant: Optional[str] = None
     quant_block_size: int = 64
+    # KV-cache quantization (serving + roofline accounting): None |
+    # "nf4" | "int8".  Float paged cache leaves store uint8 packed codes
+    # + per-block fp32 absmax scales (blocks of quant_block_size elements
+    # along head_dim, never spanning tokens), quantized on block commit
+    # and dequantized in-kernel (kernels.flash_attention paged decode) —
+    # fp cache rows never materialize in HBM.  The dense engine writes
+    # the fake-quantized round trip instead, which is the token-for-token
+    # reference the paged path is gated against.  Griffin's int32 ring
+    # position leaf and all ssm state stay unquantized.
+    kv_quant: Optional[str] = None
     # remat policy for train_step
     remat: bool = True
     # FSDP: additionally shard big weight stacks over the data axis
@@ -210,12 +222,23 @@ class PagedCacheLeafSpec(CacheLeafSpec):
     local-attention window): rows in use are ``[0, min(len, extent))``, so
     a slot's allocation saturates at ``ceil(extent / block_size)`` blocks.
 
+    ``kv_quant`` ("nf4" | "int8" | None) marks a float leaf whose pool
+    stores blockwise-quantized rows: packed codes under the leaf's own
+    key plus a ``<key>_qscale`` sibling leaf of per-block fp32 absmax
+    scales (blocks of ``quant_block`` elements along the LAST axis —
+    ``core.quantize.quantize_kv``).  The commit scatter quantizes wave
+    stripes into both leaves; the dense engine (no pool) writes the
+    fake-quantized round trip into the single fp leaf instead.  The
+    scale sibling's own spec must carry ``kv_quant=None``.
+
     The dense engine (and every existing cache-surgery helper) treats this
     exactly as a ``CacheLeafSpec`` — paging is strictly additive.
     """
 
     page_axis: int = 2
     ring: bool = False
+    kv_quant: Optional[str] = None
+    quant_block: int = 64
 
 
 def place_cache(cache, shardings):
@@ -335,6 +358,50 @@ def _scatter_paged_leaf(ls: PagedCacheLeafSpec, dst, src, n, tables):
     return dst.at[tuple(idx)].set(src.astype(dst.dtype))
 
 
+def _quantize_wave_leaves(spec, wave_cache, paged):
+    """Quantize-on-commit pre-pass for ``kv_quant`` cache leaves.
+
+    Runs BEFORE the scatter tree_map so all three trees stay structurally
+    aligned.  For every dict key whose spec is a ``PagedCacheLeafSpec``
+    with ``kv_quant`` set:
+
+    * paged mode (the spec carries a ``<key>_qscale`` sibling): the fp
+      wave stripe is split into packed codes (under the original key)
+      and fp32 block scales (under the sibling key) via ``quantize_kv``;
+    * dense mode: the stripe is replaced by its fake-quantized round
+      trip (``fake_quantize_kv``) — byte-identical codes, so dense
+      decode is the token-for-token reference for the paged pools.
+
+    Returns ``wave_cache`` untouched when no leaf is marked.
+    """
+    if not isinstance(spec, dict) or not isinstance(wave_cache, dict):
+        return wave_cache
+    out = wave_cache
+    for key, ls in spec.items():
+        if isinstance(ls, dict):
+            sub = _quantize_wave_leaves(ls, wave_cache.get(key), paged)
+            if sub is not wave_cache.get(key):
+                if out is wave_cache:
+                    out = dict(wave_cache)
+                out[key] = sub
+            continue
+        if not isinstance(ls, PagedCacheLeafSpec) or ls.kv_quant is None:
+            continue
+        if out is wave_cache:
+            out = dict(wave_cache)
+        if paged and key + "_qscale" in spec:
+            codes, scales = quantize_kv(
+                out[key], ls.kv_quant, block_size=ls.quant_block
+            )
+            out[key] = codes
+            out[key + "_qscale"] = scales
+        else:
+            out[key] = fake_quantize_kv(
+                out[key], ls.kv_quant, block_size=ls.quant_block
+            )
+    return out
+
+
 def scatter_cache_slots(spec, cache, slot_ids, wave_cache, block_tables=None):
     """Scatter the first ``len(slot_ids)`` slot stripes of ``wave_cache``
     into ``cache`` at ``slot_ids``.
@@ -351,6 +418,9 @@ def scatter_cache_slots(spec, cache, slot_ids, wave_cache, block_tables=None):
     """
     n = len(slot_ids)
     ids = jnp.asarray(slot_ids)
+    wave_cache = _quantize_wave_leaves(
+        spec, wave_cache, paged=block_tables is not None
+    )
 
     def one(ls: CacheLeafSpec, dst, src):
         if block_tables is not None and isinstance(ls, PagedCacheLeafSpec):

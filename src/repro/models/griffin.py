@@ -25,6 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.peft import adapter_subtree, get_adapter, peft_linear
+from repro.core.quantize import (
+    fake_quantize_kv,
+    kv_dequant_values,
+    quantize_kv,
+)
 from repro.kernels.dispatch import masked_softmax
 from repro.models.attention import MASK_VALUE, blockwise_causal_attention
 from repro.models.common import (
@@ -294,11 +299,56 @@ class Griffin:
                 row = jnp.arange(nb * bs)[None, :]
                 row_valid = row < jnp.minimum(new_len, w)[:, None]
                 new_cache = (k_pool, v_pool, pos_pool)
+            elif len(cache) == 7:
+                # Quantized paged ring decode: the ring pools hold packed
+                # codes + fp32 block scales.  The new token is quantized
+                # on write; the gathered blocks dequantize into dense
+                # ring views so the attention math below stays shared.
+                (k_pool, ks_pool, v_pool, vs_pool, pos_pool, new_len,
+                 bt) = cache
+                bs = k_pool.shape[1]
+                nb = bt.shape[1]
+                qb = cfg.quant_block_size
+                r = (new_len - 1) % w                            # (B,)
+                p = bt[b_idx, r // bs]
+                kc, ks = quantize_kv(kk[:, 0], cfg.kv_quant, block_size=qb)
+                vc, vs = quantize_kv(v[:, 0], cfg.kv_quant, block_size=qb)
+                k_pool = k_pool.at[p, r % bs].set(kc)
+                ks_pool = ks_pool.at[p, r % bs].set(ks)
+                v_pool = v_pool.at[p, r % bs].set(vc)
+                vs_pool = vs_pool.at[p, r % bs].set(vs)
+                pos_pool = pos_pool.at[p, r % bs].set(new_len - 1)
+                hd = cfg.head_dim
+                k_ring = kv_dequant_values(
+                    k_pool[bt].reshape(b, nb * bs, *k_pool.shape[2:]),
+                    ks_pool[bt].reshape(b, nb * bs, *ks_pool.shape[2:]),
+                    fmt=cfg.kv_quant, block_size=qb, d=hd,
+                ).astype(cfg.param_dtype)
+                v_ring = kv_dequant_values(
+                    v_pool[bt].reshape(b, nb * bs, *v_pool.shape[2:]),
+                    vs_pool[bt].reshape(b, nb * bs, *vs_pool.shape[2:]),
+                    fmt=cfg.kv_quant, block_size=qb, d=hd,
+                ).astype(cfg.param_dtype)
+                pos_ring = pos_pool[bt].reshape(b, nb * bs)
+                row = jnp.arange(nb * bs)[None, :]
+                row_valid = row < jnp.minimum(new_len, w)[:, None]
+                new_cache = (k_pool, ks_pool, v_pool, vs_pool, pos_pool)
             else:
                 k_ring, v_ring, pos_ring, new_len = cache        # ring buffer
                 slot = (new_len - 1) % w                         # (B,)
-                k_ring = k_ring.at[b_idx, slot].set(kk[:, 0])
-                v_ring = v_ring.at[b_idx, slot].set(v[:, 0])
+                k_w, v_w = kk[:, 0], v[:, 0]
+                if cfg.kv_quant is not None:
+                    # dense engine under kv_quant: write the
+                    # fake-quantized round trip — the token-for-token
+                    # reference for the quantized ring pools.
+                    k_w = fake_quantize_kv(
+                        k_w, cfg.kv_quant, block_size=cfg.quant_block_size
+                    )
+                    v_w = fake_quantize_kv(
+                        v_w, cfg.kv_quant, block_size=cfg.quant_block_size
+                    )
+                k_ring = k_ring.at[b_idx, slot].set(k_w)
+                v_ring = v_ring.at[b_idx, slot].set(v_w)
                 pos_ring = pos_ring.at[b_idx, slot].set(new_len - 1)
                 row_valid = True
                 new_cache = (k_ring, v_ring, pos_ring)
@@ -353,7 +403,12 @@ class Griffin:
             x, _ = self._attn_block(bp["attn"], get_subtree(ba, "attn"), x, rope)
             x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
             return x, None
-        lru1, conv1, lru2, conv2, k_r, v_r, pos_r, new_len = caches
+        quant = len(caches) == 10    # ring pools carry codes + scales
+        if quant:
+            (lru1, conv1, lru2, conv2, k_r, ks_r, v_r, vs_r, pos_r,
+             new_len) = caches
+        else:
+            lru1, conv1, lru2, conv2, k_r, v_r, pos_r, new_len = caches
         x, (lru1, conv1) = self._rec_block(
             bp["rec1"], get_subtree(ba, "rec1"), x, (lru1, conv1)
         )
@@ -362,15 +417,18 @@ class Griffin:
             bp["rec2"], get_subtree(ba, "rec2"), x, (lru2, conv2)
         )
         x = self._mlp(bp["mlp2"], get_subtree(ba, "mlp2"), x)
-        attn_cache = (
-            (k_r, v_r, pos_r, new_len) if block_tables is None
-            else (k_r, v_r, pos_r, new_len, block_tables)
-        )
-        x, (k_r, v_r, pos_r) = self._attn_block(
+        if quant:
+            attn_cache = (k_r, ks_r, v_r, vs_r, pos_r, new_len, block_tables)
+        else:
+            attn_cache = (
+                (k_r, v_r, pos_r, new_len) if block_tables is None
+                else (k_r, v_r, pos_r, new_len, block_tables)
+            )
+        x, attn_new = self._attn_block(
             bp["attn"], get_subtree(ba, "attn"), x, rope, cache=attn_cache,
         )
         x = self._mlp(bp["mlp3"], get_subtree(ba, "mlp3"), x)
-        return x, (lru1, conv1, lru2, conv2, k_r, v_r, pos_r)
+        return x, (lru1, conv1, lru2, conv2) + attn_new
 
     def _constrain_residual(self, x):
         """§Perf D: sequence-parallel residual constraint between macro
@@ -457,14 +515,20 @@ class Griffin:
         per-token (ring-row) axis and are ``PagedCacheLeafSpec(ring=True)``
         — a paged slot allocates ring blocks lazily up to
         ``ceil(local_window / block_size)``; the O(1) LRU/conv states stay
-        dense."""
+        dense.  ``cfg.kv_quant`` marks the float ring leaves for
+        blockwise-quantized pools; ``pos`` (int32) stays unquantized."""
+        cfg = self.cfg
         spec = {
             "lru1": CacheLeafSpec(slot_axis=1),
             "conv1": CacheLeafSpec(slot_axis=1),
             "lru2": CacheLeafSpec(slot_axis=1),
             "conv2": CacheLeafSpec(slot_axis=1),
-            "k": PagedCacheLeafSpec(slot_axis=1, page_axis=2, ring=True),
-            "v": PagedCacheLeafSpec(slot_axis=1, page_axis=2, ring=True),
+            "k": PagedCacheLeafSpec(slot_axis=1, page_axis=2, ring=True,
+                                    kv_quant=cfg.kv_quant,
+                                    quant_block=cfg.quant_block_size),
+            "v": PagedCacheLeafSpec(slot_axis=1, page_axis=2, ring=True,
+                                    kv_quant=cfg.kv_quant,
+                                    quant_block=cfg.quant_block_size),
             "pos": PagedCacheLeafSpec(slot_axis=1, page_axis=2, fill=-1,
                                       ring=True),
             "len": CacheLeafSpec(slot_axis=0),
@@ -551,26 +615,44 @@ class Griffin:
             (new_len - 1)[:, None], cfg.head_dim, cfg.rope_theta
         )
 
+        quant = "k_qscale" in cache  # quantized ring pools
+
         def body(x, xs):
-            bp, ba, lru1, conv1, lru2, conv2, k_r, v_r, pos_r = xs
+            if quant:
+                (bp, ba, lru1, conv1, lru2, conv2, k_r, ks_r, v_r, vs_r,
+                 pos_r) = xs
+                caches = (lru1, conv1, lru2, conv2, k_r, ks_r, v_r, vs_r,
+                          pos_r, new_len)
+            else:
+                bp, ba, lru1, conv1, lru2, conv2, k_r, v_r, pos_r = xs
+                caches = (lru1, conv1, lru2, conv2, k_r, v_r, pos_r,
+                          new_len)
             x, new = self._macro(
-                bp, ba, x, rope,
-                caches=(lru1, conv1, lru2, conv2, k_r, v_r, pos_r, new_len),
-                block_tables=block_tables,
+                bp, ba, x, rope, caches=caches, block_tables=block_tables
             )
             return x, new
 
-        x, outs = jax.lax.scan(
-            body, x,
-            (params["blocks"], block_adapters, cache["lru1"], cache["conv1"],
-             cache["lru2"], cache["conv2"], cache["k"], cache["v"],
-             cache["pos"]),
-        )
-        lru1, conv1, lru2, conv2, k_r, v_r, pos_r = outs
-        new_cache = dict(
-            lru1=lru1, conv1=conv1, lru2=lru2, conv2=conv2,
-            k=k_r, v=v_r, pos=pos_r, len=new_len,
-        )
+        xs = (params["blocks"], block_adapters, cache["lru1"],
+              cache["conv1"], cache["lru2"], cache["conv2"], cache["k"])
+        if quant:
+            xs += (cache["k_qscale"], cache["v"], cache["v_qscale"],
+                   cache["pos"])
+        else:
+            xs += (cache["v"], cache["pos"])
+        x, outs = jax.lax.scan(body, x, xs)
+        if quant:
+            lru1, conv1, lru2, conv2, k_r, ks_r, v_r, vs_r, pos_r = outs
+            new_cache = dict(
+                lru1=lru1, conv1=conv1, lru2=lru2, conv2=conv2,
+                k=k_r, k_qscale=ks_r, v=v_r, v_qscale=vs_r, pos=pos_r,
+                len=new_len,
+            )
+        else:
+            lru1, conv1, lru2, conv2, k_r, v_r, pos_r = outs
+            new_cache = dict(
+                lru1=lru1, conv1=conv1, lru2=lru2, conv2=conv2,
+                k=k_r, v=v_r, pos=pos_r, len=new_len,
+            )
         tail_adapters = adapter_subtree(peft, "tail", adapter_ids)
         for i in range(self.n_tail):
             tp = params["tail"]

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.peft import adapter_subtree, get_adapter, peft_linear
+from repro.core.quantize import fake_quantize_kv, quantize_kv
 from repro.models.attention import (
     blockwise_causal_attention,
     chunk_attention,
@@ -214,12 +215,48 @@ class Transformer:
                 mesh=mesh,
             )
             new_kv = (k_pool, v_pool)
+        elif len(cache) == 6:
+            # paged quantized decode: the pools hold packed codes + fp32
+            # block scales; the new token is quantized on write and
+            # attention dequantizes gathered blocks (in-kernel for the
+            # Pallas backend) — fp cache rows never exist in HBM.
+            k_codes, k_scales, v_codes, v_scales, cache_len, bt = cache
+            bs = k_codes.shape[1]
+            qb = cfg.quant_block_size
+            idx = cache_len - 1
+            b_idx = jnp.arange(b)
+            p = bt[b_idx, idx // bs]
+            kc, ks = quantize_kv(k[:, 0], cfg.kv_quant, block_size=qb)
+            vc, vs = quantize_kv(v[:, 0], cfg.kv_quant, block_size=qb)
+            k_codes = k_codes.at[p, idx % bs].set(kc)
+            k_scales = k_scales.at[p, idx % bs].set(ks)
+            v_codes = v_codes.at[p, idx % bs].set(vc)
+            v_scales = v_scales.at[p, idx % bs].set(vs)
+            out = paged_decode_attention(
+                q, k_codes, v_codes, bt, cache_len, window=window,
+                fast_softmax=cfg.fast_softmax, backend=cfg.attn_backend,
+                mesh=mesh, kv_quant=cfg.kv_quant, k_scales=k_scales,
+                v_scales=v_scales, quant_block=qb,
+                value_dtype=cfg.param_dtype,
+            )
+            new_kv = (k_codes, k_scales, v_codes, v_scales)
         else:
             k_cache, v_cache, cache_len = cache
             idx = cache_len - 1  # slot of the new token (already counted)
             b_idx = jnp.arange(b)
-            k_cache = k_cache.at[b_idx, idx].set(k[:, 0])
-            v_cache = v_cache.at[b_idx, idx].set(v[:, 0])
+            k_w, v_w = k[:, 0], v[:, 0]
+            if cfg.kv_quant is not None:
+                # dense engine under kv_quant: write the fake-quantized
+                # round trip — the token-for-token reference the paged
+                # quantized pools are gated against.
+                k_w = fake_quantize_kv(
+                    k_w, cfg.kv_quant, block_size=cfg.quant_block_size
+                )
+                v_w = fake_quantize_kv(
+                    v_w, cfg.kv_quant, block_size=cfg.quant_block_size
+                )
+            k_cache = k_cache.at[b_idx, idx].set(k_w)
+            v_cache = v_cache.at[b_idx, idx].set(v_w)
             out = decode_attention(
                 q, k_cache, v_cache, cache_len, window=window,
                 fast_softmax=cfg.fast_softmax, kv_block=cfg.kv_block,
@@ -366,9 +403,14 @@ class Transformer:
         per-token axis, so they are ``PagedCacheLeafSpec`` — poolable by
         the paged serving cache; the dense engine treats them identically
         (see CacheLeafSpec)."""
+        cfg = self.cfg
+        kv = PagedCacheLeafSpec(
+            slot_axis=1, page_axis=2, kv_quant=cfg.kv_quant,
+            quant_block=cfg.quant_block_size,
+        )
         return {
-            "k": PagedCacheLeafSpec(slot_axis=1, page_axis=2),
-            "v": PagedCacheLeafSpec(slot_axis=1, page_axis=2),
+            "k": kv,
+            "v": kv,
             "len": CacheLeafSpec(slot_axis=0),
         }
 
@@ -456,23 +498,38 @@ class Transformer:
         rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
         layer_adapters = adapter_subtree(peft, "layers", adapter_ids)
 
+        quant = "k_qscale" in cache  # paged pools hold codes + scales
+
         def body(x, xs):
-            lp, la, k_l, v_l = xs
-            layer_cache = (
-                (k_l, v_l, new_len) if block_tables is None
-                else (k_l, v_l, new_len, block_tables)
-            )
-            x, _aux, (k_l, v_l) = self._layer(
+            if quant:
+                lp, la, k_l, ks_l, v_l, vs_l = xs
+                layer_cache = (k_l, ks_l, v_l, vs_l, new_len, block_tables)
+            else:
+                lp, la, k_l, v_l = xs
+                layer_cache = (
+                    (k_l, v_l, new_len) if block_tables is None
+                    else (k_l, v_l, new_len, block_tables)
+                )
+            x, _aux, kv = self._layer(
                 lp, la, x, rope=rope, cache=layer_cache, mesh=mesh
             )
-            return x, (k_l, v_l)
+            return x, kv
 
-        x, (k_new, v_new) = jax.lax.scan(
-            body, x, (params["layers"], layer_adapters, cache["k"], cache["v"])
-        )
+        if quant:
+            xs = (params["layers"], layer_adapters, cache["k"],
+                  cache["k_qscale"], cache["v"], cache["v_qscale"])
+        else:
+            xs = (params["layers"], layer_adapters, cache["k"], cache["v"])
+        x, kv_new = jax.lax.scan(body, x, xs)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._unembed(params, x)
-        new_cache = {"k": k_new, "v": v_new, "len": new_len}
+        if quant:
+            k_new, ks_new, v_new, vs_new = kv_new
+            new_cache = {"k": k_new, "k_qscale": ks_new, "v": v_new,
+                         "v_qscale": vs_new, "len": new_len}
+        else:
+            k_new, v_new = kv_new
+            new_cache = {"k": k_new, "v": v_new, "len": new_len}
         return _mask_vocab_pad(logits, cfg.vocab_size), new_cache
 
     def prefill_chunk(self, params, peft, batch, cache, pos, n_valid,

@@ -74,6 +74,26 @@ bank built over the same quantized base serves token-for-token
 identically to per-tenant single-tenant engines (tested, dense + paged
 + sharded).
 
+Quantized KV-cache blocks (``cfg.kv_quant="nf4" | "int8"``, engine
+``kv_quant=`` cross-checks the knob): paged block pools store PACKED
+codes (uint8 nibble pairs for nf4, int8 otherwise) plus a per-block
+fp32 absmax-scale sibling leaf (``<key>_qscale``), blockwise along
+head_dim (``cfg.quant_block_size`` — blocks never span tokens).
+Prefill waves and chunked staging stay full precision; a stripe is
+quantized exactly once, at block commit inside the ``insert_cache``
+scatter, and each decode step quantizes the incoming token's K/V row
+on append.  With ``cfg.attn_backend="pallas"`` the paged flash-decode
+kernel gathers code+scale blocks through the block table and
+dequantizes in VMEM (``kernels.flash_attention``); the reference path
+dequantizes the gathered pools with the very same
+``core.quantize.dequant_values``.  Because scale blocks are per-token,
+paged-quantized decode is token-for-token IDENTICAL to the dense
+engine serving the same model (whose stripes hold fake-quantized
+values through the same helpers) — pinned dense == paged == sharded.
+``cache_bytes_allocated`` bills the quantized pool bytes (a ~3.6x KV
+cut for nf4 at block 64 over bf16; see ``serve_bench --smoke`` rows
+``serve_kvquant_*`` and the roofline's ``quantized_kv_adjustment``).
+
 Sharded serving (``mesh=...``, e.g. ``launch.mesh.make_host_mesh(2, 4)``):
 the engine becomes mesh-aware end to end —
 
@@ -194,7 +214,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import sanitize
-from repro.models.common import merge_cache_slots, reset_cache_slots
+from repro.models.common import (
+    insert_cache_slots, merge_cache_slots, reset_cache_slots,
+)
 from repro.serve.paging import PagedCacheView, addressable_nbytes
 from repro.serve.scheduler import LatencyHistogram
 
@@ -241,6 +263,7 @@ class ServingEngine:
         prefill_chunk: Optional[int] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
         base_quant: Optional[str] = None,
+        kv_quant: Optional[str] = None,
     ):
         self.model = model
         self.cfg = model.cfg
@@ -256,6 +279,25 @@ class ServingEngine:
                 params, base_quant,
                 block_size=self.cfg.quant_block_size,
             )
+        # quantized KV-cache blocks: the decode graph itself quantizes on
+        # commit (models branch on cfg.kv_quant), so the engine knob only
+        # cross-checks — it cannot enable quantization for a model built
+        # without it.
+        cfg_kv = getattr(self.cfg, "kv_quant", None)
+        if kv_quant is not None:
+            if kv_quant not in ("nf4", "int8"):
+                raise ValueError(f"unknown kv_quant format {kv_quant!r}")
+            if cfg_kv is None:
+                raise ValueError(
+                    "kv_quant= requires the model cfg to set kv_quant "
+                    "(the decode graph quantizes KV at block commit)"
+                )
+            if kv_quant != cfg_kv:
+                raise ValueError(
+                    f"engine kv_quant={kv_quant!r} conflicts with model "
+                    f"cfg.kv_quant={cfg_kv!r}"
+                )
+        self.kv_quant = cfg_kv
         self.n_slots = n_slots
         self.max_len = max_len
         self.seq_bucket = seq_bucket
@@ -313,11 +355,19 @@ class ServingEngine:
         if cache == "paged":
             self.pager = PagedCacheView(
                 model, n_slots, max_len, block_size, n_blocks,
-                data_shards=data_shards,
+                data_shards=data_shards, kv_quant=kv_quant,
             )
         else:
             self.pager = None
         self._paged = self.pager is not None and self.pager.paged
+        # spec of the SERVING cache: in paged-quant mode the pools hold
+        # packed codes plus ``<key>_qscale`` scale leaves, so every
+        # cache-surgery call on the serving cache (shardings, the merge,
+        # the insert scatter) must use the view's augmented spec.  Waves
+        # and chunked staging stay dense full-precision (base spec).
+        self.serve_spec = (
+            self.pager.serve_spec if self._paged else self.spec
+        )
 
         # --- explicit shardings for every jitted entry point
         if mesh is not None:
@@ -330,7 +380,8 @@ class ServingEngine:
                 else jax.eval_shape(lambda: model.init_cache(n_slots, max_len))
             )
             self._cache_sh = cache_shardings(
-                self.cfg, mesh, struct, spec=self.spec, paged=self._paged,
+                self.cfg, mesh, struct, spec=self.serve_spec,
+                paged=self._paged,
                 pool_data_shards=(
                     self.pager.data_shards if self._paged else None
                 ),
@@ -398,6 +449,9 @@ class ServingEngine:
                 for leaf in jax.tree_util.tree_leaves(self.params)
             )),
             "base_quant": base_quant or "none",
+            # KV-cache quantization format actually in effect (the paged
+            # stats refresh keeps this in sync with the pool view)
+            "kv_quant": self.kv_quant or "none",
         }
 
         can_prefill = (
@@ -534,8 +588,21 @@ class ServingEngine:
         # two layouts differ in batch extent, so one spec can't cover
         # both).  Compile count is bounded: wave sizes <= n_slots, token
         # extents bucketed.
-        def _insert(cache, ids, wave, bt):
-            return model.insert_cache(cache, ids, wave, block_tables=bt)
+        if self._paged and self.pager.kv_quant is not None:
+            # quantized pools: the model's own insert_cache scatters with
+            # its BASE cache_spec(), which has no ``_qscale`` leaves —
+            # route through the shared body with the view's augmented
+            # spec instead (the scatter pre-pass quantizes each wave
+            # stripe into codes + scales at commit).
+            serve_spec = self.serve_spec
+
+            def _insert(cache, ids, wave, bt):
+                return insert_cache_slots(
+                    serve_spec, cache, ids, wave, block_tables=bt
+                )
+        else:
+            def _insert(cache, ids, wave, bt):
+                return model.insert_cache(cache, ids, wave, block_tables=bt)
 
         if mesh is None:
             self._insert_fn = _insert
@@ -723,6 +790,7 @@ class ServingEngine:
         )
         if self.pager is not None:
             self.stats.update(self.pager.stats())
+            self.stats["kv_quant"] = self.stats.get("kv_quant") or "none"
         else:
             if "cache_bytes_allocated" not in self.stats:
                 # per-host (addressable) bytes, not the logical global
@@ -1029,7 +1097,7 @@ class ServingEngine:
         logits, new_cache = self._decode(*self._decode_args(toks))
         self.stats["decode_calls"] += 1
         self.cache = merge_cache_slots(
-            self.spec, new_cache, self.cache, active,
+            self.serve_spec, new_cache, self.cache, active,
             skip_paged=self._paged,
         )
         # anything admission stamped before this dispatch is now on device

@@ -45,6 +45,7 @@ paths of each model family, and the scalar-prefetch Pallas kernel
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -140,11 +141,23 @@ class PagedCacheView:
     sharding's contiguous chunks) and allocates only from that shard's
     arena, whose local row 0 is its null block.  ``n_blocks`` is rounded
     up to a multiple of ``data_shards`` so arenas stay equal.
+
+    ``kv_quant`` ("nf4" | "int8", default: whatever the model's
+    ``cache_spec()`` leaves carry) stores every FLOAT paged leaf as
+    blockwise-quantized pools: packed codes under the leaf's own key
+    (nf4 halves the last axis to ``uint8``; int8 keeps it at ``int8``)
+    plus a ``<key>_qscale`` sibling pool of per-block fp32 absmax scales
+    (``ceil(head_dim / quant_block)`` per row).  ``serve_spec`` is the
+    augmented spec the engine must use for all cache surgery; byte
+    gauges bill the quantized leaves, so ``cache_bytes_allocated``
+    reports packed bytes.  Int leaves (Griffin's ring position) stay
+    unquantized.
     """
 
     def __init__(self, model, n_slots: int, max_len: int, block_size: int,
                  n_blocks: Optional[int] = None, dtype=None,
-                 data_shards: int = 1):
+                 data_shards: int = 1, kv_quant: Optional[str] = None,
+                 quant_block: Optional[int] = None):
         if block_size < 1:
             raise ValueError("block_size must be positive")
         if data_shards < 1:
@@ -206,6 +219,66 @@ class PagedCacheView:
         self._device_tables = None  # refreshed lazily after table edits
         self._bytes_per_block = 0.0  # filled by init_cache
         self._dense_bytes = 0        # filled by init_cache
+        if kv_quant is not None and kv_quant not in ("nf4", "int8"):
+            raise ValueError(f"unknown kv_quant {kv_quant!r}")
+        self.kv_quant = None  # resolved per-leaf below
+        self.quant_block = 0
+        self.serve_spec, self._serve_shapes = self._apply_kv_quant(
+            kv_quant, quant_block
+        )
+
+    # ------------------------------------------------------ quantized pools
+    def _apply_kv_quant(self, kv_quant, quant_block):
+        """Augment (spec, dense shapes) with quantized-pool leaves.
+
+        Every FLOAT ``PagedCacheLeafSpec`` leaf whose format resolves to
+        non-None (ctor override wins over the spec's own ``kv_quant``)
+        is rewritten to a packed-code struct under its own key plus a
+        ``<key>_qscale`` scale struct; everything else passes through
+        (with any stale ``kv_quant`` flag stripped off non-quantizable
+        leaves, so the commit scatter never fires on them).
+        """
+        spec, shapes = self.spec, self._dense_shapes
+        if not (self.paged and isinstance(spec, dict)):
+            return spec, shapes
+        out_spec: Dict[str, Any] = {}
+        out_shapes: Dict[str, Any] = {}
+        for key, ls in spec.items():
+            sd = shapes[key]
+            fmt = kv_quant if kv_quant is not None else getattr(
+                ls, "kv_quant", None
+            )
+            ok = (
+                isinstance(ls, PagedCacheLeafSpec)
+                and fmt is not None
+                and jnp.issubdtype(jnp.dtype(sd.dtype), jnp.floating)
+            )
+            if not ok:
+                if isinstance(ls, PagedCacheLeafSpec) and ls.kv_quant:
+                    ls = dataclasses.replace(ls, kv_quant=None)
+                out_spec[key] = ls
+                out_shapes[key] = sd
+                continue
+            d = sd.shape[-1]
+            qb = quant_block or ls.quant_block
+            if fmt == "nf4" and d % 2:
+                raise ValueError(
+                    f"nf4 KV needs an even head_dim, got {d} for {key!r}"
+                )
+            ls = dataclasses.replace(ls, kv_quant=fmt, quant_block=qb)
+            out_spec[key] = ls
+            out_shapes[key] = jax.ShapeDtypeStruct(
+                sd.shape[:-1] + (d // 2,), jnp.uint8
+            ) if fmt == "nf4" else jax.ShapeDtypeStruct(sd.shape, jnp.int8)
+            out_spec[key + "_qscale"] = dataclasses.replace(
+                ls, kv_quant=None, fill=0
+            )
+            out_shapes[key + "_qscale"] = jax.ShapeDtypeStruct(
+                sd.shape[:-1] + (-(-d // qb),), jnp.float32
+            )
+            self.kv_quant = fmt
+            self.quant_block = qb
+        return out_spec, out_shapes
 
     # ------------------------------------------------------------- sharding
     def shard_of(self, slot: int) -> int:
@@ -249,7 +322,8 @@ class PagedCacheView:
                 )
             return jax.ShapeDtypeStruct(sd.shape, sd.dtype)
 
-        return jax.tree_util.tree_map(one, self.spec, self._dense_shapes)
+        return jax.tree_util.tree_map(one, self.serve_spec,
+                                      self._serve_shapes)
 
     def init_cache(self, shardings: Any = None) -> Dict[str, Any]:
         """Zero-filled cache: block pools for paged leaves, the model's
@@ -264,13 +338,14 @@ class PagedCacheView:
                 return jnp.zeros(self._pool_shape(ls, sd.shape), sd.dtype)
             return jnp.zeros(sd.shape, sd.dtype)
 
-        cache = jax.tree_util.tree_map(one, self.spec, self._dense_shapes)
+        cache = jax.tree_util.tree_map(one, self.serve_spec,
+                                       self._serve_shapes)
         if shardings is not None:
             cache = jax.device_put(cache, shardings)
         bytes_per_block = 0.0
         dense_bytes = 0
         for ls, leaf in zip(
-            jax.tree_util.tree_leaves(self.spec),
+            jax.tree_util.tree_leaves(self.serve_spec),
             jax.tree_util.tree_leaves(cache),
         ):
             if self.paged and isinstance(ls, PagedCacheLeafSpec):
@@ -373,6 +448,7 @@ class PagedCacheView:
                 "peak_blocks_in_use": 0,
                 "cache_bytes_allocated": int(self._dense_bytes),
                 "peak_block_utilization": 0.0,
+                "kv_quant": None,
             }
         in_use = sum(a.in_use for a in self._arenas)
         usable = self.n_blocks - self.data_shards     # minus arena nulls
@@ -387,4 +463,5 @@ class PagedCacheView:
                 self._dense_bytes + in_use * self._bytes_per_block
             ),
             "peak_block_utilization": peak / usable,
+            "kv_quant": self.kv_quant,
         }

@@ -33,6 +33,7 @@ import its metric types without a cycle.  Pieces:
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from collections import deque
@@ -68,6 +69,12 @@ class LatencyHistogram:
     def __init__(self, lo: float = 1e-6, n_buckets: int = 28):
         self.lo = lo
         self.counts = [0] * n_buckets
+        # Upper edges lo * 2**(i+1), materialized as the same float
+        # products callers construct edge values from: bucketing compares
+        # against these directly instead of ``int(log2(seconds / lo))``,
+        # whose rounded division could land an exact edge ``lo * 2**k``
+        # in bucket k-1.
+        self._edges = [lo * 2.0 ** (i + 1) for i in range(n_buckets - 1)]
         self.count = 0
         self.total = 0.0
         self.max = 0.0
@@ -75,8 +82,7 @@ class LatencyHistogram:
     def _bucket(self, seconds: float) -> int:
         if seconds <= self.lo:
             return 0
-        i = int(math.log2(seconds / self.lo))
-        return min(max(i, 0), len(self.counts) - 1)
+        return bisect.bisect_right(self._edges, seconds)
 
     def record(self, seconds: float) -> None:
         self.counts[self._bucket(seconds)] += 1
@@ -89,16 +95,24 @@ class LatencyHistogram:
         return self.total / self.count if self.count else 0.0
 
     def percentile(self, p: float) -> float:
-        """Approximate p-th percentile (p in [0, 100]); 0.0 when empty."""
+        """Approximate p-th percentile (p in [0, 100]); 0.0 when empty.
+
+        The rank is ``max(1, ceil(p/100 * count))`` — a fractional rank
+        rounds UP to the next recorded value and p=0 asks for the first
+        one, so an empty leading bucket can never satisfy ``seen >=
+        rank`` with rank 0.  The bucket midpoint is clamped to ``max``:
+        the approximation can never report a latency above the largest
+        one actually recorded.
+        """
         if not self.count:
             return 0.0
-        rank = p / 100.0 * self.count
+        rank = max(1, math.ceil(p / 100.0 * self.count))
         seen = 0
         for i, c in enumerate(self.counts):
             seen += c
             if seen >= rank:
-                return self.lo * 2.0 ** (i + 0.5)
-        return self.lo * 2.0 ** len(self.counts)
+                return min(self.lo * 2.0 ** (i + 0.5), self.max)
+        return self.max
 
     def to_dict(self) -> Dict[str, float]:
         return {

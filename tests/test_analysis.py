@@ -45,9 +45,9 @@ def _checks(rec, **kw):
 # ----------------------------------------------- kernel contract checker
 
 def test_repo_kernels_all_clean_and_registered():
-    """The real kernels must pass, and all six families are registered."""
+    """The real kernels must pass, and all seven families are registered."""
     assert ak.registered_kernels() == [
-        "flash_decode", "flash_fwd", "paged_decode",
+        "flash_decode", "flash_fwd", "paged_decode", "paged_decode_quant",
         "quanta_apply", "quanta_linear", "quantized_matmul",
     ]
     findings = ak.check_kernels()

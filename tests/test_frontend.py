@@ -330,3 +330,47 @@ def test_interleave_policy():
     clock = VirtualClock(1.0)
     assert clock() == 1.0 and clock.advance(0.5) == 1.5 and clock() == 1.5
     assert [c.name for c in DEFAULT_CLASSES] == ["interactive", "batch"]
+
+
+def test_latency_histogram_percentile_rank_and_clamp():
+    """Regression: percentile() must use rank = max(1, ceil(p/100 * n)).
+    The old int() rank let p=0 (rank 0) return the empty leading bucket's
+    midpoint, and fractional ranks rounded DOWN to one value too early;
+    the midpoint must also clamp to the recorded max."""
+    h = LatencyHistogram()
+    h.record(0.5)                   # single value, far from bucket 0
+    # any percentile of a single sample is that sample's bucket, never
+    # the empty low buckets (p=0 used to hit bucket 0 with rank 0)
+    for p in (0.0, 0.1, 50.0, 99.9, 100.0):
+        assert 0.25 <= h.percentile(p) <= 0.5
+    # clamp: the geometric bucket midpoint may exceed the largest
+    # recorded latency — never report above max
+    h2 = LatencyHistogram()
+    h2.record(1.1e-6)               # bucket [1e-6, 2e-6), midpoint ~1.41e-6
+    assert h2.percentile(99) <= h2.max
+    # fractional rank rounds UP: with 3 values, p=50 -> rank 2 (not 1)
+    h3 = LatencyHistogram()
+    for v in (1e-5, 1e-3, 1e-1):
+        h3.record(v)
+    assert h3.percentile(50) >= 0.5e-3      # 2nd value's bucket
+    assert h3.percentile(34) >= 0.5e-3      # ceil(1.02) = 2
+    assert h3.percentile(33) <= 2e-5        # ceil(0.99) = 1
+
+
+def test_latency_histogram_bucket_edges():
+    """Regression: bucketing is a threshold-table bisect, so an exact
+    bucket edge ``lo * 2**k`` lands in bucket k — the old
+    ``int(log2(seconds / lo))`` form could put it in k-1 via float
+    rounding of the division."""
+    h = LatencyHistogram()
+    n = len(h.counts)
+    assert h._bucket(0.0) == 0
+    assert h._bucket(h.lo) == 0
+    for k in range(1, n - 1):
+        edge = h.lo * 2.0 ** k
+        assert h._bucket(edge) == k, f"edge {edge} not in bucket {k}"
+        assert h._bucket(edge * 1.5) == k
+    # beyond the table: everything lands in the last bucket
+    assert h._bucket(h.lo * 2.0 ** (n + 5)) == n - 1
+    h.record(h.lo * 2.0 ** (n + 5))
+    assert h.counts[-1] == 1

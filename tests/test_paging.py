@@ -374,3 +374,220 @@ def test_roofline_bills_paged_decode_by_allocated_blocks():
     assert paged_cache_adjustment(
         cfg.replace(kv_cache="paged"), train
     ) is None                                               # decode-only
+
+
+# ------------------------------------------------ quantized KV blocks
+def test_quantize_kv_roundtrip_and_remainder_blocks():
+    from repro.core.quantize import fake_quantize_kv, kv_dequant_values, \
+        quantize_kv
+
+    rng = jax.random.PRNGKey(3)
+    for d, fmt, qb in [(64, "nf4", 64), (80, "nf4", 64), (24, "int8", 16),
+                       (64, "int8", 64)]:
+        x = jax.random.normal(rng, (5, 7, 2, d), jnp.float32)
+        codes, scales = quantize_kv(x, fmt, block_size=qb)
+        n_sb = -(-d // qb)
+        assert scales.shape == (5, 7, 2, n_sb)
+        assert scales.dtype == jnp.float32
+        assert codes.dtype == (jnp.uint8 if fmt == "nf4" else jnp.int8)
+        assert codes.shape[-1] == (d // 2 if fmt == "nf4" else d)
+        deq = kv_dequant_values(codes, scales, fmt=fmt, block_size=qb, d=d)
+        assert deq.shape == x.shape
+        # nf4's worst case is half the largest codebook gap (~0.152)
+        # times the block absmax; int8 is absmax / 254
+        tol = 0.16 if fmt == "nf4" else 0.02
+        err = float(jnp.max(jnp.abs(deq - x)))
+        amax = float(jnp.max(jnp.abs(x)))
+        assert err <= tol * amax
+        # fake_quantize_kv IS the round trip (the dense-reference write)
+        np.testing.assert_array_equal(
+            np.asarray(fake_quantize_kv(x, fmt, block_size=qb)),
+            np.asarray(deq.astype(x.dtype)))
+    # per-token-row granularity: quantizing a stripe == quantizing rows
+    x = jax.random.normal(rng, (3, 8, 2, 64), jnp.float32)
+    c_all, s_all = quantize_kv(x, "nf4")
+    c_one, s_one = quantize_kv(x[:, 2:3], "nf4")
+    np.testing.assert_array_equal(np.asarray(c_all[:, 2:3]),
+                                  np.asarray(c_one))
+    np.testing.assert_array_equal(np.asarray(s_all[:, 2:3]),
+                                  np.asarray(s_one))
+    with pytest.raises(ValueError):
+        quantize_kv(x[..., :63], "nf4")          # nf4 needs even head_dim
+
+
+@pytest.mark.parametrize("fmt,hd,qb", [("nf4", 16, 16), ("nf4", 80, 64),
+                                       ("int8", 24, 16)])
+def test_paged_quant_decode_kernel_matches_reference(fmt, hd, qb):
+    """Pallas dequant-in-VMEM kernel vs the reference gather-and-dequant
+    path — including remainder scale blocks (hd=80, qb=64) and windows."""
+    from repro.core.quantize import quantize_kv
+
+    b, h, kv, bs, nb = 3, 8, 4, 8, 8
+    n_pool = b * nb + 1
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k_pool = jax.random.normal(ks[1], (n_pool, bs, kv, hd))
+    v_pool = jax.random.normal(ks[2], (n_pool, bs, kv, hd))
+    kc, ksc = quantize_kv(k_pool, fmt, block_size=qb)
+    vc, vsc = quantize_kv(v_pool, fmt, block_size=qb)
+    lens = jnp.array([5, 37, 64], jnp.int32)
+    rng = np.random.default_rng(2)
+    perm = rng.permutation(np.arange(1, n_pool))
+    tables = np.zeros((b, nb), np.int32)
+    off = 0
+    for i in range(b):
+        n_alloc = -(-int(lens[i]) // bs)
+        tables[i, :n_alloc] = perm[off:off + n_alloc]
+        tables[i, n_alloc:] = tables[i, n_alloc - 1]
+        off += n_alloc
+    tables = jnp.asarray(tables)
+    quant = dict(kv_quant=fmt, k_scales=ksc, v_scales=vsc, quant_block=qb)
+    for window in (None, 12):
+        ref = paged_decode_attention(q, kc, vc, tables, lens,
+                                     window=window, **quant)
+        out = paged_decode_attention(q, kc, vc, tables, lens,
+                                     window=window, backend="pallas",
+                                     **quant)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b"])
+@pytest.mark.parametrize("fmt", ["nf4", "int8"])
+def test_paged_quant_engine_matches_dense_fake_quant(arch, fmt):
+    """Quantized paged pools vs the dense fake-quantized cache: greedy
+    outputs must be IDENTICAL (same codes at commit, same dequant_values
+    on read), under slot churn."""
+    cfg = get_smoke(arch).replace(kv_quant=fmt)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[5, 9, 13], [40, 2], [7, 7, 7, 7, 21, 3, 99], [100, 101],
+               [1], [13, 5, 88, 4, 2]]
+    outs = {}
+    for mode in ("dense", "paged"):
+        engine = ServingEngine(model, params, n_slots=3, max_len=64,
+                               cache=mode, block_size=8, kv_quant=fmt)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        assert all(r.done for r in reqs)
+        assert engine.stats["kv_quant"] == fmt
+        outs[mode] = [r.output for r in reqs]
+    assert outs["paged"] == outs["dense"]
+
+
+def test_paged_quant_engine_pallas_backend_matches_reference():
+    cfg = get_smoke("qwen2-0.5b").replace(kv_quant="nf4", kv_block=16)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    prompts = [[5, 9, 13], [40, 2, 17, 3], [7] * 9]
+    outs = {}
+    for backend, mode in (("reference", "dense"), ("pallas", "paged")):
+        m = build_model(cfg.replace(attn_backend=backend))
+        engine = ServingEngine(m, params, n_slots=3, max_len=64,
+                               cache=mode, block_size=16)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        outs[mode] = [r.output for r in reqs]
+    assert outs["paged"] == outs["dense"]
+
+
+def test_engine_kv_quant_kwarg_validation():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="unknown kv_quant"):
+        ServingEngine(model, params, n_slots=1, max_len=32, kv_quant="fp8")
+    with pytest.raises(ValueError, match="requires the model cfg"):
+        ServingEngine(model, params, n_slots=1, max_len=32, kv_quant="nf4")
+    qmodel = build_model(cfg.replace(kv_quant="int8"))
+    with pytest.raises(ValueError, match="conflicts"):
+        ServingEngine(qmodel, params, n_slots=1, max_len=32,
+                      kv_quant="nf4")
+
+
+def test_quant_view_serve_spec_and_block_bytes():
+    """The quantized view's serve_spec carries packed-code leaves plus
+    fp32 ``_qscale`` siblings, and the materialized pool block is
+    smaller than the fp pool block."""
+    cfg = get_smoke("qwen2-0.5b")
+    sizes = {}
+    for fmt in (None, "nf4", "int8"):
+        m = build_model(cfg.replace(kv_quant=fmt) if fmt else cfg)
+        engine = ServingEngine(m, m.init(jax.random.PRNGKey(0)),
+                               n_slots=2, max_len=32, cache="paged",
+                               block_size=8, kv_quant=fmt)
+        sizes[fmt] = engine.pager._bytes_per_block
+        names = list(engine.pager.serve_spec)
+        if fmt:
+            assert any(n.endswith("_qscale") for n in names)
+        else:
+            assert not any(n.endswith("_qscale") for n in names)
+    assert sizes["nf4"] < sizes["int8"] < sizes[None]
+
+
+def test_paged_view_ensure_out_of_blocks_is_atomic():
+    """A failed grow must raise MemoryError and leave the view exactly as
+    it was: no table mutation, no count bump, no leaked blocks — the
+    engine's admission retry path depends on this."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    # deliberately over-committed pool: 7 allocatable blocks for two
+    # slots that can hold 8 each
+    view = PagedCacheView(model, n_slots=2, max_len=64, block_size=8,
+                          n_blocks=8)
+    view.ensure(0, 40)                        # 5 blocks -> 2 left
+    arena = view._arenas[view.shard_of(1)]
+    assert arena.available == 2
+    tables = view._tables.copy()
+    counts = view._counts.copy()
+    with pytest.raises(MemoryError):
+        view.ensure(1, 4 * 8)                 # wants 4, has 2
+    np.testing.assert_array_equal(view._tables, tables)
+    np.testing.assert_array_equal(view._counts, counts)
+    assert arena.available == 2               # nothing leaked
+    view.ensure(1, 2 * 8)                     # what's left still works
+    assert int(view._counts[1]) == 2
+
+
+def test_roofline_quantized_kv_adjustment():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.launch.roofline import quantized_kv_adjustment
+
+    cfg = get_config("minicpm-2b")
+    shape = next(s for s in SHAPES if s.name == "decode_32k")
+    assert quantized_kv_adjustment(cfg, shape) is None       # fp default
+    paged = cfg.replace(kv_cache="paged", kv_quant="nf4")
+    adj = quantized_kv_adjustment(paged, shape)
+    assert adj is not None and adj["fmt"] == "nf4"
+    assert adj["kv_read_bytes_quant"] < adj["kv_read_bytes_fp"]
+    # nf4: 0.5 B/elem + fp32 scale per 64 elems vs 2 B fp16 -> ~3.56x
+    assert 3.0 < adj["kv_stream_cut"] < 4.0
+    i8 = quantized_kv_adjustment(cfg.replace(kv_cache="paged",
+                                             kv_quant="int8"), shape)
+    assert 1.5 < i8["kv_stream_cut"] < 2.0
+    train = next(s for s in SHAPES if s.name == "train_4k")
+    assert quantized_kv_adjustment(paged, train) is None     # decode-only
+
+
+def test_roofline_paged_rows_ceil_before_block_round():
+    """occupancy * seq_len fractionally ABOVE a block boundary must bill
+    the next whole block: the old int() truncation dropped the fraction
+    and under-billed one block (satellite fix)."""
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.launch.roofline import paged_cache_adjustment
+
+    cfg = get_config("minicpm-2b")
+    shape = next(s for s in SHAPES if s.name == "decode_32k")
+    s = shape.seq_len
+    occ = (16.0 + 1e-4) / s                   # occupancy * s = 16.0001
+    adj = paged_cache_adjustment(
+        cfg.replace(kv_cache="paged", kv_occupancy=occ, kv_block_size=16),
+        shape)
+    assert adj["paged_rows_per_slot"] == 32   # 2 blocks, not int()->16

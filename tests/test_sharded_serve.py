@@ -273,6 +273,34 @@ def test_sharded_quantized_base_matches_single_device():
 
 
 @multidevice
+@pytest.mark.parametrize("fmt", ["nf4", "int8"])
+def test_sharded_quantized_kv_matches_single_device(fmt):
+    """Quantized-KV mesh leg: with ``cfg.kv_quant`` the packed-code pools
+    and their ``_qscale`` siblings take the spec-driven pool rules (DP on
+    the block axis), and the sharded paged engine — reference AND pallas
+    backends — must generate token-for-token what the single-device
+    DENSE fake-quantized engine does, with compile-guard bounds held."""
+    cfg = get_smoke("qwen2-0.5b").replace(kv_quant=fmt)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, _ = _serve(model, params, n_slots=4, max_len=64)
+    out, engine = _serve(model, params, n_slots=4, max_len=64,
+                         mesh=_mesh(), cache="paged", block_size=8,
+                         kv_quant=fmt)
+    assert out == base
+    assert engine.stats["kv_quant"] == fmt
+    assert engine.pager.data_shards == 2
+    assert any(n.endswith("_qscale") for n in engine.pager.serve_spec)
+    engine.compile_guard.assert_ok()
+    if fmt == "nf4":
+        pl = build_model(cfg.replace(attn_backend="pallas", kv_block=16))
+        out, engine = _serve(pl, params, n_slots=4, max_len=64,
+                             mesh=_mesh(), cache="paged", block_size=16)
+        assert out == base
+        engine.compile_guard.assert_ok()
+
+
+@multidevice
 def test_sharded_prefill_admission_is_o1_dispatches():
     """O(1) jitted dispatch per admitted wave must survive the mesh: one
     prefill call and the tick's one fused decode, regardless of prompt
