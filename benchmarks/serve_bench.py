@@ -46,7 +46,16 @@ compiles):
   dedicated single-tenant engines), and ``merged`` (``merge_all``
   zero-overhead deployment, asserted identical to ``single``).  Rows
   report tokens/sec plus the ``adapter_bytes`` / ``adapter_tenants``
-  gauges next to the cache bytes.
+  gauges next to the cache bytes,
+* **hot-swap adapter churn** — a 64-tenant ``AdapterStore`` registry
+  served through an 8-row ``AdapterPool`` resident bank: two waves
+  round-robined over 16 distinct tenants force load/evict churn
+  mid-run.  The row reports steady tokens/sec, the donated row-scatter
+  swap latency (p50), the ``adapter_bytes_resident`` (capacity-fixed
+  device bank) vs ``adapter_bytes_registry`` (host factors, grows with
+  tenants) split, and the load/eviction counts; two churned tenants are
+  asserted token-for-token against dedicated cold engines and the
+  compile guard asserts the serving jits never recompiled across swaps.
 
 * **open-loop front end** (``--open-loop``) — a seeded Poisson arrival
   schedule (two SLA classes, ``interactive``/``batch``) streamed
@@ -68,6 +77,7 @@ CSV rows via ``benchmarks.common.csv_row``:
 ``serve_quant_<family>_nf4_<dense|paged>, ...``,
 ``serve_kvquant_<family>_<nf4|int8>, ...``,
 ``serve_adapters_<family>_<single|pallas|bank8|merged>, ...``,
+``serve_churn_<family>_pool8, <us per token>, <derived>``,
 ``serve_sharded_<family>_<dense|paged>, ...`` and
 ``serve_openloop_<family>_<dense|paged>_<class|engine>, <ttft p50 us>,
 <derived>``.
@@ -75,7 +85,8 @@ CSV rows via ``benchmarks.common.csv_row``:
 ``--smoke`` (CI gate) runs the transformer family only, with the paged
 vs dense, quantized-base (nf4 dense vs paged), quantized-KV (nf4 and
 int8 paged vs dense fake-quantized), multi-adapter (bank8 / pallas /
-merged vs single), open-loop vs closed-loop (``--open-loop``), and —
+merged vs single), hot-swap churn (pool vs cold engines, zero
+recompiles), open-loop vs closed-loop (``--open-loop``), and —
 with ``--sharded`` — sharded vs single-device equivalence assertions
 intact.
 """
@@ -97,6 +108,7 @@ if "--sharded" in sys.argv and "jax" not in sys.modules:
         ).strip()
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
@@ -106,7 +118,8 @@ from repro.core.peft import PeftConfig, attach, merge_all
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve import (
-    DEFAULT_CLASSES, Request, ServeFrontend, ServingEngine, poisson_arrivals,
+    DEFAULT_CLASSES, AdapterPool, AdapterStore, Request, ServeFrontend,
+    ServingEngine, poisson_arrivals,
 )
 
 FAMILIES = {
@@ -184,6 +197,7 @@ def bench_family(family: str, arch: str, sharded: bool = False):
     if family != "mamba2":       # no pageable leaves: kv_quant is a no-op
         rows.extend(bench_kvquant_cache(family, cfg, params))
     rows.extend(bench_adapter_modes(family, arch, cfg, model, params))
+    rows.extend(bench_adapter_churn(family, arch, model, params))
     if sharded:
         rows.extend(bench_sharded(family, model, params, dense_outs))
     return rows
@@ -394,6 +408,99 @@ def bench_adapter_modes(family: str, arch: str, cfg, model, params):
         f"toks/s={tps:.0f} adapter_bytes={stats['adapter_bytes']}",
     ))
     return rows
+
+
+def bench_adapter_churn(family: str, arch: str, model, params):
+    """Hot-swap adapter lifecycle: a 64-tenant ``AdapterStore`` registry
+    served through an 8-row ``AdapterPool``, with waves round-robined
+    over 16 distinct tenants so residency churns mid-run (loads + LRU
+    evictions while earlier tenants still decode).  Asserts two churned
+    tenants token-for-token against dedicated cold engines and that the
+    serving jits never recompiled across swaps (one swap trace total:
+    all tenants share one structure profile), then reports the byte
+    split the registry/resident divide exists for.
+    """
+    targets = get_peft(arch).targets
+    _, proto = attach(
+        jax.random.PRNGKey(1), params,
+        PeftConfig(method="lora", rank=4, targets=targets),
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(proto)
+    store = AdapterStore(max_tenants=64)
+    sets = {}
+    for i in range(64):
+        rng = np.random.default_rng(i)
+        sets[f"t{i:02d}"] = jax.tree_util.tree_unflatten(treedef, [
+            np.asarray(leaf)
+            + (0.1 * rng.standard_normal(np.shape(leaf))).astype(
+                np.asarray(leaf).dtype)
+            for leaf in leaves
+        ])
+        store.register(f"t{i:02d}", sets[f"t{i:02d}"])
+    pool = AdapterPool.build(params, store, capacity=8)
+
+    engine = ServingEngine(model, params, adapters=pool,
+                           n_slots=N_SLOTS, max_len=MAX_LEN)
+    n_wave = 2 * N_SLOTS
+    served = [f"t{(i * 5) % 64:02d}" for i in range(16)]   # 16 > capacity
+    outs = {}
+    for wave_i, uid0 in enumerate((0, 100)):
+        prompts = _prompts(n_wave, seed=1 + wave_i)
+        reqs = [
+            Request(uid=uid0 + i, prompt=list(p), max_new_tokens=MAX_NEW,
+                    adapter=served[(wave_i * n_wave + i) % len(served)])
+            for i, p in enumerate(prompts)
+        ]
+        for r in reqs:
+            engine.submit(r)
+        t0 = time.perf_counter()               # warmup wave pays compiles
+        engine.run()
+        total_s = time.perf_counter() - t0
+        outs.update({r.uid: (r.adapter, list(r.prompt), r.output)
+                     for r in reqs})
+    toks = sum(len(o) for _, _, o in outs.values())
+    tps = toks / total_s
+    stats = engine.stats
+    engine.compile_guard.assert_ok()
+    counts = engine.compile_guard.counts()
+    assert counts["swap"] == 1, (
+        f"{family}: adapter hot-swap retraced ({counts['swap']} compiles "
+        "for one structure profile)"
+    )
+    assert stats["adapter_loads"] > 8 and stats["adapter_evictions"] > 0, (
+        f"{family}: churn wave never exercised the pool "
+        f"(loads={stats['adapter_loads']} "
+        f"evictions={stats['adapter_evictions']})"
+    )
+
+    # token-for-token: two churned tenants vs dedicated cold engines
+    for name in (served[0], served[9]):
+        mine = {u: (p, o) for u, (t, p, o) in outs.items() if t == name}
+        cold = ServingEngine(
+            model, params,
+            jax.tree_util.tree_map(jnp.asarray, sets[name]),
+            n_slots=N_SLOTS, max_len=MAX_LEN,
+        )
+        creqs = [Request(uid=u, prompt=list(p), max_new_tokens=MAX_NEW)
+                 for u, (p, _) in sorted(mine.items())]
+        for r in creqs:
+            cold.submit(r)
+        cold.run()
+        for r in creqs:
+            assert r.output == mine[r.uid][1], (
+                f"{family}: pooled tenant {name} uid={r.uid} diverged "
+                "from its cold single-tenant engine"
+            )
+
+    return [csv_row(
+        f"serve_churn_{family}_pool8", 1e6 / tps,
+        f"toks/s={tps:.0f} tenants={stats['adapter_tenants']} "
+        f"loads={stats['adapter_loads']} "
+        f"evictions={stats['adapter_evictions']} "
+        f"swap_p50={stats['adapter_swap_p50'] * 1e6:.0f}us "
+        f"resident_bytes={stats['adapter_bytes_resident']} "
+        f"registry_bytes={stats['adapter_bytes_registry']}",
+    )]
 
 
 def bench_sharded(family: str, model, params, base):

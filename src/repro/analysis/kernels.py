@@ -599,3 +599,41 @@ def _build_quantized_matmul():
         ("nf4_colpad_norms", run(64, 256, 640, "nf4", 64, 64, 512,
                                  normalize="rowcol")),
     ])
+
+
+# Banked-gather LoRA (multi-tenant serving): operand 0 is the int32
+# scalar-prefetch adapter_ids; x / bank-stacked A / bank-stacked B
+# [/ shared W for the fused variant] follow.  The A/B index maps address
+# bank rows through the prefetched ids (the Punica-style gather) — the
+# checker walks them with a synthetic prefetch vector.
+@register_kernel("banked_gather")
+def _build_banked_gather():
+    from repro.kernels.banked_gather import (
+        banked_lora_delta,
+        banked_lora_linear,
+    )
+
+    def run(n_slots, seq, d_in, d_out, g, rank, block_cols, fuse,
+            dtype=jnp.float32):
+        x = jnp.zeros((n_slots, seq, d_in), dtype)
+        a = jnp.zeros((g + 1, d_in, rank), dtype)
+        b = jnp.zeros((g + 1, rank, d_out), dtype)
+        ids = jnp.asarray(np.arange(n_slots) % (g + 1), jnp.int32)
+        if fuse:
+            w = jnp.zeros((d_in, d_out), dtype)
+            return lambda: banked_lora_linear(
+                x, w, a, b, ids, scale=2.0, block_cols=block_cols,
+                interpret=True,
+            )
+        return lambda: banked_lora_delta(
+            x, a, b, ids, scale=2.0, block_cols=block_cols, interpret=True,
+        )
+
+    return _capture_cases([
+        # decode tick at qwen2-0.5b hidden, fused base+gather; grid (8, 2)
+        ("fused_decode_d896", run(8, 1, 896, 896, 4, 8, 448, True)),
+        # prefill wave, delta-only (quantized base keeps its own kernel)
+        ("delta_prefill_s64", run(4, 64, 896, 896, 4, 8, 448, False)),
+        # column remainder: d_out=136 pads to 3 blocks of 48 and slices
+        ("fused_remainder", run(4, 1, 200, 136, 2, 4, 48, True)),
+    ])

@@ -101,6 +101,40 @@ class Adapter:
         del w
         return jax.tree_util.tree_map(jnp.zeros_like, self)
 
+    # --- banked (multi-tenant) application hooks -------------------------
+    # ``self`` is a BANK-STACKED adapter here: every leaf carries a
+    # leading bank axis of extent G+1 (row 0 = neutral) and ``ids`` is a
+    # traced (B,) array of per-slot local rows.  These hooks are how a
+    # method opts into a fused gather kernel without the bank ever
+    # dispatching on adapter classes (see ``repro.core.bank`` and
+    # ``repro.kernels.banked_gather``).
+
+    def banked_delta(self, x: jnp.ndarray, ids: jnp.ndarray,
+                     backend: str = "reference") -> jnp.ndarray:
+        """Per-slot gathered delta over the bank axis.
+
+        Reference semantics (and the default for every method): gather
+        each slot's factor rows with ``jnp.take``, apply ``delta``
+        row-wise under ``vmap``.  Only meaningful for delta-form methods.
+        """
+        del backend
+        sel = jax.tree_util.tree_map(
+            lambda leaf: jnp.take(leaf, ids, axis=0), self
+        )
+        return jax.vmap(lambda a, xr: a.delta(xr))(sel, x)
+
+    def banked_linear(self, x: jnp.ndarray, w: jnp.ndarray,
+                      ids: jnp.ndarray,
+                      backend: str = "reference"):
+        """Optionally-fused ``x @ w + banked_delta`` in one kernel pass.
+
+        Returns ``None`` when the method has no fused path for these
+        operands (the bank then falls back to a separate base matmul +
+        ``banked_delta``).  Only delta-form methods may implement it.
+        """
+        del x, w, ids, backend
+        return None
+
     @property
     def num_params(self) -> int:
         return sum(int(leaf.size) for leaf in jax.tree_util.tree_leaves(self))

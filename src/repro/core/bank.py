@@ -9,6 +9,18 @@ jitted program: per-request ``adapter_ids`` (0 = base model, ``1 + i`` =
 its row's adapter parameters with ``jnp.take`` along the bank axis, and
 application runs ``vmap``-per-row — O(1) dispatch regardless of how many
 tenants the batch touches (the punica / multi-LoRA serving pattern).
+``BankedAdapter.apply`` additionally routes delta-form LoRA groups through
+the fused Pallas banked-gather kernel under ``backend="pallas"``
+(``repro.kernels.banked_gather``); the vmap gather is the pinned
+reference.
+
+This module is the *device layout*; the adapter **lifecycle** lives one
+level up in ``repro.serve.adapter_pool``, which splits tenancy into a
+host-side ``AdapterStore`` registry (tenants as raw factors, unbounded)
+and a fixed-capacity **resident bank** using exactly this ``_BankPath``
+layout — rows are hot-swapped in place between serving ticks while the
+jitted programs see one static pytree shape.  A static ``AdapterBank``
+built here is the degenerate always-resident case.
 
 Layout
 ------
@@ -22,7 +34,9 @@ stores, per group:
   (``Adapter.neutral``: ``apply(x, w) == x @ w`` exactly), used for id 0
   and for requests belonging to other groups,
 * an ``id_map`` ``(n_tenants + 1,)`` from global adapter id to the local
-  bank row (0 when the tenant is not in this group).
+  bank row (0 when the tenant is not in this group).  The id_map is the
+  indirection that makes residency dynamic: requests carry stable global
+  ids, and a row swap only rewrites two id_map entries.
 
 For scan-stacked paths the bank axis sits at axis 1 — ``(L, G+1, ...)`` —
 so ``jax.lax.scan`` slices the layer axis first and the per-layer gather
@@ -35,17 +49,24 @@ The equivalence bar is token-for-token agreement with per-tenant
 single-tenant engines, so banked application avoids re-associating
 floating-point sums:
 
-* delta-form groups (LoRA / KronA / plain QuanTA) add their gathered
-  ``delta(x)`` to the shared base matmul — neutral rows add exact zeros,
-* non-delta groups (DoRA's weight rescale, ``RebasedAdapter``-wrapped
-  QuanTA) compute the member rows' full ``apply`` and ``jnp.where``-select
-  them over the base result — no add-then-subtract of the base matmul.
+* delta-form groups (LoRA / KronA / QuanTA, including fold-free QuanTA)
+  add their gathered ``delta(x)`` to the shared base matmul — neutral
+  rows add exact zeros,
+* non-delta groups (DoRA's weight rescale, DoTA, ``RebasedAdapter``-
+  wrapped folded QuanTA) compute the member rows' full ``apply`` and
+  ``jnp.where``-select them over the base result — no add-then-subtract
+  of the base matmul.
 
-QuanTA tenants are wrapped in :class:`~repro.core.adapters.RebasedAdapter`
-holding their *folded* base weight (attach folds the frozen copy,
-``W0' = W0 - S``), because their trained delta is only correct against
-that tenant-specific base.  ``AdapterBank.build`` therefore takes QuanTA
-tenants as the ``(folded_params, adapter_set)`` pair ``attach`` returned.
+QuanTA tenants come in two forms.  **Folded** tenants (the default
+``attach``) had the frozen copy folded into their base (``W0' = W0 - S``),
+so their trained delta is only correct against that tenant-specific base:
+``build`` takes them as the ``(folded_params, adapter_set)`` pair and
+wraps them in :class:`~repro.core.adapters.RebasedAdapter` — one dense
+``(d_in, d_out)`` copy per tenant per path.  **Fold-free** tenants
+(``PeftConfig(fold=False)``) carry ``S`` as frozen factors and stay
+delta-form against the shared base, so they bank bare — their residency
+cost is just their factor tensors, which is what makes large-registry
+hot-swap serving (``repro.serve.adapter_pool``) affordable.
 """
 
 from __future__ import annotations
@@ -61,7 +82,12 @@ from repro.core.adapters import Adapter, RebasedAdapter
 from repro.core.peft import AdapterSet, _set_path, flatten_paths
 from repro.core.quantize import base_matmul
 
-__all__ = ["AdapterBank", "BankedAdapter"]
+__all__ = [
+    "AdapterBank",
+    "BankedAdapter",
+    "adapter_signature",
+    "tenant_path_adapters",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -101,18 +127,32 @@ class BankedAdapter(Adapter):
 
     def apply(self, x: jnp.ndarray, w: jnp.ndarray,
               backend: str = "reference") -> jnp.ndarray:
-        # the shared-base matmul honors the backend (and a quantized base
-        # dispatches bitwise-identically either way); the gathered per-row
-        # adapter application below always runs the reference path
-        y = base_matmul(x, w, backend)
+        # Under backend="pallas" one delta-form group may fuse the shared
+        # base matmul with its row gather (Adapter.banked_linear — LoRA's
+        # banked-gather kernel); remaining delta-form groups add their
+        # gathered delta (banked_delta: fused kernel or the reference
+        # jnp.take + vmap), neutral rows contributing an exact 0.
+        # Non-delta groups compute member rows' full apply and
+        # jnp.where-select over the base result.
+        y = None
+        deferred = []
         for g, lid, dform in zip(self.groups, self.ids, self.delta_forms):
-            sel = jax.tree_util.tree_map(
-                lambda leaf: jnp.take(leaf, lid, axis=0), g
-            )
+            if y is None and dform and backend == "pallas":
+                y = g.banked_linear(x, w, lid, backend)
+                if y is not None:
+                    continue
+            deferred.append((g, lid, dform))
+        if y is None:
+            # the shared-base matmul honors the backend (and a quantized
+            # base dispatches bitwise-identically either way)
+            y = base_matmul(x, w, backend)
+        for g, lid, dform in deferred:
             if dform:
-                # neutral rows contribute an exact 0
-                y = y + jax.vmap(lambda a, xr: a.delta(xr))(sel, x)
+                y = y + g.banked_delta(x, lid, backend)
             else:
+                sel = jax.tree_util.tree_map(
+                    lambda leaf: jnp.take(leaf, lid, axis=0), g
+                )
                 full = jax.vmap(lambda a, xr: a.apply(xr, w))(sel, x)
                 mask = (lid > 0).reshape((-1,) + (1,) * (y.ndim - 1))
                 y = jnp.where(mask, full, y)
@@ -120,6 +160,62 @@ class BankedAdapter(Adapter):
 
 
 TenantEntry = Union[AdapterSet, Tuple[Any, AdapterSet]]
+
+
+def tenant_path_adapters(
+    name: str, entry: TenantEntry
+) -> Dict[str, Tuple[Adapter, Any]]:
+    """Normalize one tenant into flat ``path -> (adapter, leaf_spec)``.
+
+    Folded-QuanTA members (``AdapterLeafSpec.fold``) are wrapped in
+    :class:`RebasedAdapter` against the tenant's own folded base weight,
+    which REQUIRES the ``(params, adapter_set)`` pair ``attach`` returned.
+    Shared by :meth:`AdapterBank.build` and the hot-swap registry
+    (``repro.serve.adapter_pool.AdapterStore``) so both layouts bank the
+    exact same member pytrees.
+    """
+    if isinstance(entry, tuple):
+        t_params, aset = entry
+        flat_t = flatten_paths(t_params)
+    else:
+        aset = entry
+        flat_t = None
+    if not isinstance(aset, AdapterSet):
+        raise TypeError(
+            f"tenant {name!r}: expected an AdapterSet (or a "
+            f"(params, AdapterSet) pair), got {type(aset).__name__}"
+        )
+    specs = {s.path: s for s in aset.specs}
+    out: Dict[str, Tuple[Adapter, Any]] = {}
+    for path, adapter in aset.flat().items():
+        spec = specs[path]
+        if spec.method == "quanta" and getattr(spec, "fold", True):
+            if flat_t is None:
+                raise ValueError(
+                    f"tenant {name!r} is folded QuanTA: attach "
+                    "folds the frozen copy into the base weights, "
+                    "so the bank needs the (params, adapter_set) "
+                    "pair attach returned to rebase it onto the "
+                    "shared params (or retrain with "
+                    "PeftConfig(fold=False) for factor-only "
+                    "residency)"
+                )
+            adapter = RebasedAdapter(adapter, flat_t[path])
+        out[path] = (adapter, spec)
+    return out
+
+
+def adapter_signature(adapter: Adapter):
+    """Hashable structure signature grouping bank members: pytree
+    structure (method class + static metadata) plus leaf shapes/dtypes.
+    Members sharing a signature stack into one gather group."""
+    return (
+        jax.tree_util.tree_structure(adapter),
+        tuple(
+            (tuple(leaf.shape), str(jnp.asarray(leaf).dtype))
+            for leaf in jax.tree_util.tree_leaves(adapter)
+        ),
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -230,29 +326,9 @@ class AdapterBank:
         # path -> list of (tenant_idx, adapter, spec)
         per_path: Dict[str, list] = {}
         for t_idx, (name, entry) in enumerate(tenants.items()):
-            if isinstance(entry, tuple):
-                t_params, aset = entry
-                flat_t = flatten_paths(t_params)
-            else:
-                t_params, aset = None, entry
-                flat_t = None
-            if not isinstance(aset, AdapterSet):
-                raise TypeError(
-                    f"tenant {name!r}: expected an AdapterSet (or a "
-                    f"(params, AdapterSet) pair), got {type(aset).__name__}"
-                )
-            specs = {s.path: s for s in aset.specs}
-            for path, adapter in aset.flat().items():
-                spec = specs[path]
-                if spec.method == "quanta":
-                    if flat_t is None:
-                        raise ValueError(
-                            f"tenant {name!r} is QuanTA: attach folds the "
-                            "frozen copy into the base weights, so the bank "
-                            "needs the (params, adapter_set) pair attach "
-                            "returned to rebase it onto the shared params"
-                        )
-                    adapter = RebasedAdapter(adapter, flat_t[path])
+            for path, (adapter, spec) in tenant_path_adapters(
+                name, entry
+            ).items():
                 per_path.setdefault(path, []).append((t_idx, adapter, spec))
 
         tree: Dict[str, Any] = {}
@@ -268,13 +344,7 @@ class AdapterBank:
             # heterogeneous ranks/schemes become separate gather groups.
             sigs: Dict[Any, list] = {}
             for t_idx, adapter, _ in members:
-                sig = (
-                    jax.tree_util.tree_structure(adapter),
-                    tuple(
-                        (tuple(leaf.shape), str(jnp.asarray(leaf).dtype))
-                        for leaf in jax.tree_util.tree_leaves(adapter)
-                    ),
-                )
+                sig = adapter_signature(adapter)
                 sigs.setdefault(sig, []).append((t_idx, adapter))
             groups, id_maps, dforms = [], [], []
             for mems in sigs.values():

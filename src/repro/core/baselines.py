@@ -8,6 +8,9 @@ them uniformly — no per-method dispatch anywhere:
 
 * :class:`LoraAdapter`      — Hu et al. 2022 (``ΔW = B A``, rank r)
 * :class:`DoraAdapter`      — Liu et al. 2024 (magnitude/direction decomposition)
+* :class:`DotaAdapter`      — Hu et al. 2024 (weight-decomposed tensor
+  adaptation: DoRA's magnitude/direction split with a tensor-train delta;
+  PAPERS.md related work)
 * :class:`KronaAdapter`     — Edalati et al. 2022 (``ΔW = A ⊗ B``); the paper
   notes KronA is a special case of QuanTA (Thm. 6.1 remark)
 * :class:`BottleneckAdapter`— Houlsby-style series / He-style parallel adapter
@@ -18,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +32,7 @@ from repro.core.quantize import ensure_dense
 __all__ = [
     "LoraAdapter",
     "DoraAdapter",
+    "DotaAdapter",
     "KronaAdapter",
     "BottleneckAdapter",
 ]
@@ -55,7 +60,8 @@ class LoraAdapter(Adapter):
 
     @property
     def rank(self) -> int:
-        return self.a.shape[1]
+        # last axis so bank-stacked leaves ((G+1, d_in, r)) agree
+        return self.a.shape[-1]
 
     @property
     def scale(self) -> float:
@@ -75,6 +81,38 @@ class LoraAdapter(Adapter):
     def merge(self, w0: jnp.ndarray) -> jnp.ndarray:
         m = self.matrix()
         return (w0.astype(m.dtype) + m).astype(w0.dtype)
+
+    # --- fused banked application (repro.kernels.banked_gather) ----------
+    def _banked_kernel_ok(self, x: jnp.ndarray, *, fuse_base: bool) -> bool:
+        if self.a.ndim != 3 or x.ndim not in (2, 3):
+            return False
+        from repro.kernels.banked_gather import banked_vmem_ok
+
+        seq = x.shape[1] if x.ndim == 3 else 1
+        return banked_vmem_ok(
+            seq, self.a.shape[1], self.b.shape[2], self.rank, 512,
+            fuse_base=fuse_base,
+        )
+
+    def banked_delta(self, x: jnp.ndarray, ids: jnp.ndarray,
+                     backend: str = "reference") -> jnp.ndarray:
+        if backend == "pallas" and self._banked_kernel_ok(x, fuse_base=False):
+            from repro.kernels.banked_gather import banked_lora_delta
+
+            return banked_lora_delta(x, self.a, self.b, ids,
+                                     scale=self.scale)
+        return super().banked_delta(x, ids, backend)
+
+    def banked_linear(self, x: jnp.ndarray, w: jnp.ndarray,
+                      ids: jnp.ndarray, backend: str = "reference"):
+        dense = isinstance(w, jnp.ndarray) and w.ndim == 2
+        if (backend == "pallas" and dense
+                and self._banked_kernel_ok(x, fuse_base=True)):
+            from repro.kernels.banked_gather import banked_lora_linear
+
+            return banked_lora_linear(x, w, self.a, self.b, ids,
+                                      scale=self.scale)
+        return None
 
 
 @jax.tree_util.register_dataclass
@@ -136,6 +174,111 @@ class DoraAdapter(Adapter):
         return DoraAdapter(
             jnp.zeros_like(self.a), jnp.zeros_like(self.b),
             jnp.linalg.norm(w0.astype(self.a.dtype), axis=0), self.alpha,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DotaAdapter(Adapter):
+    """DoTA: weight-decomposed tensor adaptation (PAPERS.md related work).
+
+    DoRA's magnitude/direction decomposition with the low-rank update
+    replaced by a tensor-train (MPO) delta::
+
+        W' = m * (W0 + ΔW_tt) / ||W0 + ΔW_tt||_col
+        ΔW_tt[i, j] = G_1[i_1, j_1] G_2[i_2, j_2] ... G_N[i_N, j_N]
+
+    where ``i = (i_1..i_N)`` / ``j = (j_1..j_N)`` factorize the weight
+    axes and each core ``G_k`` has shape ``(r_{k-1}, f_in_k, f_out_k,
+    r_k)`` with bond ranks ``r_0 = r_N = 1``.  The last core is
+    zero-initialized so the delta starts at zero and ``m`` initializes to
+    ``W0``'s column norms — the layer starts exactly at the base model.
+
+    Weight-coupled like DoRA (``delta_form = False``): the column-norm
+    rescale reads the whole adapted matrix, so banked serving uses the
+    ``jnp.where``-select path.  Its existence test is the protocol's
+    extension story: nothing outside this class knows about DoTA.
+    """
+
+    delta_form = False
+
+    cores: Tuple[jnp.ndarray, ...]     # (r_{k-1}, f_in_k, f_out_k, r_k)
+    m: jnp.ndarray                     # (d_out,) magnitudes
+    dims_in: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    dims_out: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def create(key, w0: jnp.ndarray, *, rank: int = 2, n_axes: int = 3,
+               dims_in: Sequence[int] | None = None,
+               dims_out: Sequence[int] | None = None,
+               dtype=jnp.float32) -> "DotaAdapter":
+        d_in, d_out = w0.shape
+        if dims_in is None or dims_out is None:
+            # same axis factorization QuanTA uses (rectangular ratio on
+            # axis 0); deferred import — peft imports this module
+            from repro.core.peft import choose_dims
+
+            dims_in, dims_out = choose_dims(d_in, d_out, n_axes)
+        dims_in, dims_out = tuple(dims_in), tuple(dims_out)
+        if math.prod(dims_in) != d_in or math.prod(dims_out) != d_out:
+            raise ValueError(
+                f"dims {dims_in}x{dims_out} do not factor ({d_in}, {d_out})"
+            )
+        n = len(dims_in)
+        ranks = (1,) + (rank,) * (n - 1) + (1,)
+        keys = jax.random.split(key, n)
+        cores = []
+        for k in range(n):
+            shape = (ranks[k], dims_in[k], dims_out[k], ranks[k + 1])
+            if k == n - 1:
+                cores.append(jnp.zeros(shape, dtype))  # zero update at init
+            else:
+                fan = ranks[k] * dims_in[k]
+                cores.append(
+                    jax.random.normal(keys[k], shape, dtype) / math.sqrt(fan)
+                )
+        m = jnp.linalg.norm(w0.astype(dtype), axis=0)
+        return DotaAdapter(tuple(cores), m, dims_in, dims_out)
+
+    @property
+    def num_params(self) -> int:
+        return sum(c.size for c in self.cores) + self.m.size
+
+    def tt_matrix(self) -> jnp.ndarray:
+        """Materialize the tensor-train delta as ``(d_in, d_out)``."""
+        mat = jnp.ones((1, 1, 1), self.cores[0].dtype)
+        for core in self.cores:
+            # (I, O, r) x (r, a, b, s) -> (I*a, O*b, s)
+            mat = jnp.einsum("ior,rabs->iaobs", mat, core)
+            i, a, o, b, s = mat.shape
+            mat = mat.reshape(i * a, o * b, s)
+        return mat[:, :, 0]
+
+    def adapted_weight(self, w0: jnp.ndarray) -> jnp.ndarray:
+        # weight-coupled: a quantized frozen base must be materialized
+        # (the column-norm rescale reads the whole matrix)
+        w0 = ensure_dense(w0)
+        w = w0.astype(self.m.dtype) + self.tt_matrix()
+        col_norm = jnp.linalg.norm(w, axis=0, keepdims=True)
+        return (self.m[None, :] * w / jnp.maximum(col_norm, 1e-12)).astype(
+            w0.dtype
+        )
+
+    def apply(self, x: jnp.ndarray, w0: jnp.ndarray,
+              backend: str = "reference") -> jnp.ndarray:
+        del backend
+        return x @ self.adapted_weight(w0)
+
+    def merge(self, w0: jnp.ndarray) -> jnp.ndarray:
+        return self.adapted_weight(w0)
+
+    def neutral(self, w0: jnp.ndarray) -> "DotaAdapter":
+        """No-op DoTA for ``w0``: zero cores, ``m`` = column norms."""
+        w0 = ensure_dense(w0)
+        return DotaAdapter(
+            tuple(jnp.zeros_like(c) for c in self.cores),
+            jnp.linalg.norm(w0.astype(self.m.dtype), axis=0),
+            self.dims_in, self.dims_out,
         )
 
 

@@ -46,7 +46,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quanta as Q
-from repro.core.baselines import DoraAdapter, KronaAdapter, LoraAdapter
+from repro.core.baselines import (
+    DoraAdapter,
+    DotaAdapter,
+    KronaAdapter,
+    LoraAdapter,
+)
 from repro.core.factorize import factorize, parse_scheme
 from repro.core.quantize import base_matmul
 
@@ -72,7 +77,7 @@ DEFAULT_TARGETS = (r".*/(q_proj|v_proj)$",)
 class PeftConfig:
     """Which method to attach, where, and with what hyperparameters."""
 
-    method: str = "quanta"  # quanta | lora | dora | krona | ft | none
+    method: str = "quanta"  # quanta | lora | dora | dota | krona | ft | none
     targets: Tuple[str, ...] = DEFAULT_TARGETS
     # QuanTA
     n_axes: int = 4
@@ -83,6 +88,12 @@ class PeftConfig:
     #                                       toward universality, App. C)
     init: str = "identity_noise"
     noise_scale: float = 0.02
+    # fold=True (paper Eq. 9): attach folds the frozen copy S into the
+    # base weights.  fold=False: base stays untouched; the adapter carries
+    # S as factors and computes Eq. 8 directly (delta-form against the
+    # shared W0) — required for factor-only multi-tenant serving
+    # (repro.serve.adapter_pool).
+    fold: bool = True
     # LoRA / DoRA
     rank: int = 8
     alpha: float = 16.0
@@ -129,10 +140,11 @@ class AdapterLeafSpec:
     """Static per-path record of what ``attach`` created."""
 
     path: str           # parameter key path, e.g. "layers/attn/q_proj"
-    method: str         # quanta | lora | dora | krona
+    method: str         # quanta | lora | dora | dota | krona
     stacked: bool       # True: leading layer axis, sliced by lax.scan
     d_in: int
     d_out: int
+    fold: bool = True   # quanta only: False = fold-free (Eq. 8) attach
 
 
 @jax.tree_util.register_dataclass
@@ -264,6 +276,13 @@ def _make_adapter(key, w: jnp.ndarray, cfg: PeftConfig):
                 k, w_layer.astype(cfg.dtype), rank=cfg.rank, alpha=cfg.alpha,
                 dtype=cfg.dtype,
             )
+        if cfg.method == "dota":
+            # weight-decomposed like DoRA (per-layer magnitude init) with
+            # a tensor-train delta over QuanTA's axis factorization
+            return DotaAdapter.create(
+                k, w_layer.astype(cfg.dtype), rank=cfg.rank,
+                n_axes=cfg.n_axes, dtype=cfg.dtype,
+            )
         if cfg.method == "krona":
             a_in, a_out = _krona_dims(cfg, d_in, d_out)
             return KronaAdapter.create(
@@ -292,11 +311,15 @@ def attach(
 
     Returns ``(base_params, adapter_set)`` with ``adapter_set`` an
     :class:`AdapterSet` (``{}`` for the full-FT / no-PEFT methods, so the
-    trainable tree stays empty).  For QuanTA, ``base_params`` has the
-    frozen initialization copy folded in (``W0' = W0 - S``, Eq. 8/9) so
-    the adapted model is exactly the base model at step 0.  For the other
-    methods the adapters are zero-initialized by construction and the base
-    weights are returned unchanged.
+    trainable tree stays empty).  For QuanTA with ``cfg.fold=True`` (the
+    default), ``base_params`` has the frozen initialization copy folded in
+    (``W0' = W0 - S``, Eq. 8/9) so the adapted model is exactly the base
+    model at step 0.  With ``cfg.fold=False`` the base weights are
+    returned unchanged and the adapter carries ``S`` as frozen factors
+    (Eq. 8 computed directly) — same step-0 exactness, delta-form against
+    the shared base.  For the other methods the adapters are
+    zero-initialized by construction and the base weights are returned
+    unchanged.
     """
     if cfg.method in ("ft", "none"):
         return params, {}
@@ -315,11 +338,17 @@ def attach(
         if w.ndim not in (2, 3):
             raise ValueError(f"target {path} has ndim={w.ndim}; expected 2 or 3")
         adapter = _make_adapter(k, w, cfg)
+        if cfg.method == "quanta" and not cfg.fold:
+            # fold-free (Eq. 8): stamp the frozen copy S onto the adapter
+            # instead of folding it into the base weight
+            adapter = dataclasses.replace(adapter, frozen=adapter.tensors)
         _set_path(peft, path, adapter)
         stacked = w.ndim == 3
         d_in, d_out = w.shape[-2], w.shape[-1]
-        specs.append(AdapterLeafSpec(path, cfg.method, stacked, d_in, d_out))
-        if cfg.method == "quanta":
+        specs.append(AdapterLeafSpec(
+            path, cfg.method, stacked, d_in, d_out, fold=cfg.fold
+        ))
+        if cfg.method == "quanta" and cfg.fold:
             _set_path(new_params, path, _fold_quanta(w, adapter))
     return new_params, AdapterSet(tree=peft, specs=tuple(specs))
 

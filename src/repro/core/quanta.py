@@ -27,9 +27,19 @@ ratio, the *first* tensor in the schedule that touches axis 0 is rectangular
 
 Zero initialization (Eq. 8/9): the adapted layer starts as
 ``y = W0 x + T_theta x - S x`` with ``S`` a frozen copy of the initialized
-tensors.  ``S`` is then folded into the base weight; note the paper's Eq. 9
-writes ``W0' = W0 + S`` but Eq. 8 requires ``W0' = W0 - S`` — we implement
-the mathematically consistent sign (``fold_frozen_copy`` subtracts).
+tensors.  Two equivalent realizations are supported:
+
+* **folded** (the paper's deployment form): ``S`` is folded into the base
+  weight at attach time; note the paper's Eq. 9 writes ``W0' = W0 + S``
+  but Eq. 8 requires ``W0' = W0 - S`` — we implement the mathematically
+  consistent sign (``fold_frozen_copy`` subtracts).
+* **fold-free** (``PeftConfig(fold=False)``): the base stays untouched and
+  the adapter carries ``S`` as frozen factor tensors
+  (:attr:`QuantaAdapter.frozen`), computing Eq. 8 directly as
+  ``delta(x) = T_theta x - S x``.  The adapter stays delta-form against
+  the *shared* ``W0``, which is what lets a multi-tenant bank serve a
+  QuanTA tenant as just its factors (no per-tenant dense folded base —
+  see ``repro.core.bank`` / ``repro.serve.adapter_pool``).
 """
 
 from __future__ import annotations
@@ -301,9 +311,24 @@ def materialize_einsum(
 class QuantaAdapter(Adapter):
     """Trainable QuanTA state for one linear layer.
 
-    After :func:`fold_frozen_copy` the adapted layer is (Eq. 9)::
+    Folded mode (``frozen is None``, the default): after
+    :func:`fold_frozen_copy` the adapted layer is (Eq. 9)::
 
         y = x @ w0_folded + adapter.delta(x)
+
+    Fold-free mode (``frozen`` holds the initialization copy ``S`` as
+    factor tensors): the base weight is untouched and Eq. 8 is computed
+    directly::
+
+        y = x @ w0 + (T_theta x - S x)        # delta(x) subtracts S
+
+    At initialization ``T_theta == S`` bitwise, so the delta is exactly
+    zero — the adapted model IS the base model at step 0, same as the
+    folded form, without a per-layer dense ``W0 - S`` copy.  ``S`` rides
+    in the trainable pytree but is excluded from gradients
+    (``stop_gradient``) and from ``num_params``; train with
+    ``weight_decay=0`` (the repo default) or a decay mask so the frozen
+    copy is not silently decayed.
 
     Implements the :class:`repro.core.adapters.Adapter` protocol;
     ``apply`` additionally routes through the fused Pallas kernels
@@ -316,6 +341,9 @@ class QuantaAdapter(Adapter):
     pairs: Tuple[Tuple[int, int], ...] = dataclasses.field(
         metadata=dict(static=True)
     )
+    # fold-free mode: frozen copy S of the initialized tensors (Eq. 8).
+    # None (default, flattens to an empty subtree) = folded mode.
+    frozen: Tuple[jnp.ndarray, ...] | None = None
 
     @staticmethod
     def create(
@@ -370,16 +398,44 @@ class QuantaAdapter(Adapter):
     def num_params(self) -> int:
         return param_count(self.dims_in, self.pairs, self.dims_out)
 
+    @property
+    def fold_free(self) -> bool:
+        """True when this adapter carries the frozen copy S (Eq. 8 mode)."""
+        return self.frozen is not None
+
+    def unfrozen(self, tensors: Tuple[jnp.ndarray, ...] | None = None
+                 ) -> "QuantaAdapter":
+        """A plain (folded-mode) view over ``tensors`` (default: the
+        trainable chain) — used to route each chain of the fold-free pair
+        through the single-chain fused kernels."""
+        t = tensors if tensors is not None else self.tensors
+        return QuantaAdapter(t, self.dims_in, self.dims_out, self.pairs)
+
     def delta(self, x: jnp.ndarray) -> jnp.ndarray:
-        """``T_theta x`` for batched ``x (..., d_in) -> (..., d_out)``."""
-        return apply_sequential(
-            x.astype(self.tensors[0].dtype),
-            self.tensors, self.dims_in, self.pairs, self.dims_out,
-        ).astype(x.dtype)
+        """``T_theta x`` (folded) or ``T_theta x - S x`` (fold-free) for
+        batched ``x (..., d_in) -> (..., d_out)``."""
+        h = x.astype(self.tensors[0].dtype)
+        y = apply_sequential(
+            h, self.tensors, self.dims_in, self.pairs, self.dims_out
+        )
+        if self.frozen is not None:
+            # stop_gradient on S only — the S chain is linear in x, so
+            # gradients still flow through x to upstream layers
+            y = y - apply_sequential(
+                h, jax.lax.stop_gradient(self.frozen),
+                self.dims_in, self.pairs, self.dims_out,
+            )
+        return y.astype(x.dtype)
 
     def matrix(self) -> jnp.ndarray:
-        """Full ``(d_in, d_out)`` operator matrix."""
-        return materialize(self.tensors, self.dims_in, self.pairs, self.dims_out)
+        """Full ``(d_in, d_out)`` update matrix (fold-free subtracts S)."""
+        m = materialize(self.tensors, self.dims_in, self.pairs, self.dims_out)
+        if self.frozen is not None:
+            m = m - materialize(
+                jax.lax.stop_gradient(self.frozen),
+                self.dims_in, self.pairs, self.dims_out,
+            )
+        return m
 
     def apply(self, x: jnp.ndarray, w: jnp.ndarray,
               backend: str = "reference") -> jnp.ndarray:
@@ -396,12 +452,21 @@ class QuantaAdapter(Adapter):
         from repro.core.quantize import QuantizedLinear, base_matmul
 
         if backend == "pallas" and w.ndim == 2:
+            from repro.kernels.ops import quanta_apply_fused
+
+            if self.frozen is not None:
+                # fold-free: base matmul (fused-dequant for quantized
+                # bases) + each chain of the T - S pair through the
+                # fused-chain kernel
+                s_view = self.unfrozen(jax.lax.stop_gradient(self.frozen))
+                return base_matmul(x, w, backend) + (
+                    quanta_apply_fused(x, self.unfrozen())
+                    - quanta_apply_fused(x, s_view)
+                ).astype(x.dtype)
             if isinstance(w, QuantizedLinear):
                 # quantized frozen base: fused dequant-matmul for the
                 # base + the fused chain kernel for the delta (the dense
                 # weight is never materialized in HBM)
-                from repro.kernels.ops import quanta_apply_fused
-
                 return base_matmul(x, w, backend) + quanta_apply_fused(
                     x, self
                 ).astype(x.dtype)

@@ -157,6 +157,14 @@ def peft_shardings(mesh: Mesh, peft: Any, bank_dp: bool = False) -> Any:
     extent divides (GSPMD inserts the gather collectives at apply time);
     leaves without a divisible bank axis — and the ``id_maps`` — keep the
     replicated rule.  Requires an ``AdapterBank`` (ignored otherwise).
+
+    Hot-swap pools (``serve.adapter_pool.AdapterPool``) route their
+    resident bank — an ``AdapterBank`` with fixed ``capacity + 1`` row
+    extents — through this same function, both for the one-time
+    ``device_put`` at ``AdapterPool.place`` and for the serving jits'
+    ``in_shardings`` of the bank ARGUMENT (pool banks are traced
+    arguments, not closed-over constants, so the placement must be
+    declared at the call boundary).
     """
     axes = getattr(peft, "bank_axis_tree", None)
     if not bank_dp or axes is None:

@@ -1,9 +1,11 @@
 """Serving runtime: batched continuous-batching engine (dense or paged
 KV cache, single-device or mesh-sharded) over merged, adapter-attached,
 or multi-tenant (``AdapterBank`` + per-request adapter selection)
-models, plus the async SLA-scheduled streaming front end
-(``ServeFrontend``) layered on top."""
+models — including hot-swap tenant residency for large registries
+(``AdapterStore`` + ``AdapterPool``) — plus the async SLA-scheduled
+streaming front end (``ServeFrontend``) layered on top."""
 
+from repro.serve.adapter_pool import AdapterPool, AdapterStore, RowAllocator
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.frontend import ServeFrontend, TokenStream
 from repro.serve.paging import (

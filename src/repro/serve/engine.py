@@ -144,6 +144,24 @@ Adapters (single-tenant vs multi-tenant):
   sharded).  Under a mesh the bank is placed by
   ``launch.shardings.peft_shardings`` (replicated by default; the bank
   axis can be DP-split).
+* **hot-swap adapter pool** (``adapters=``, a
+  ``serve.adapter_pool.AdapterPool``): the lifecycle tier over the bank
+  layout, for registries far larger than the device should hold.  A
+  host-side ``AdapterStore`` keeps every registered tenant as raw
+  factors; only a fixed-capacity resident bank lives on device, and —
+  unlike the static bank, which the serving jits close over — it rides
+  as a **traced argument** of prefill/chunk/decode, so loading or
+  evicting a tenant between ticks recompiles nothing (the donated
+  row-scatter ``swap`` entry point traces once per tenant structure
+  profile).  Admission pins a request's tenant (``AdapterPool.acquire``,
+  the LAST admission check — an unloadable tenant defers the request,
+  and evicting a pinned tenant is refused); slot free and preemption
+  unpin.  Requests carry stable global ids, so a preempted request
+  survives its tenant being evicted and reloaded into a different bank
+  row.  ``stats`` splits ``adapter_bytes_resident`` (device rows, fixed
+  by capacity) from ``adapter_bytes_registry`` (host factors, grows
+  with tenants); fold-free QuanTA tenants (``PeftConfig(fold=False)``)
+  keep both figures factor-sized — no per-tenant dense base copies.
 
 Async front end (``repro.serve.frontend.ServeFrontend``): this engine is
 the **closed-loop core** — ``step()`` admits, dispatches one fused
@@ -217,6 +235,7 @@ from repro.analysis import sanitize
 from repro.models.common import (
     insert_cache_slots, merge_cache_slots, reset_cache_slots,
 )
+from repro.serve.adapter_pool import AdapterPool
 from repro.serve.paging import PagedCacheView, addressable_nbytes
 from repro.serve.scheduler import LatencyHistogram
 
@@ -314,9 +333,17 @@ class ServingEngine:
                 "adapters= (an AdapterBank with per-request selection)"
             )
         self.bank = adapters
+        # hot-swap lifecycle mode (adapters= an AdapterPool): the resident
+        # bank is a traced ARGUMENT of every serving jit — a static bank
+        # is closed over instead, baked into the compiled programs
+        self.pool = adapters if isinstance(adapters, AdapterPool) else None
         # what the model jits close over: the bank (selected per request
-        # by adapter_ids) or the engine-wide single adapter set
-        served = adapters if adapters is not None else peft
+        # by adapter_ids) or the engine-wide single adapter set; pool mode
+        # closes over nothing (the bank rides as an argument)
+        served = (
+            None if self.pool is not None
+            else adapters if adapters is not None else peft
+        )
         # per-slot tenant ids (0 = base model), threaded into every
         # serving jit when a bank is attached
         self._adapter_ids = np.zeros((n_slots,), np.int32)
@@ -349,7 +376,19 @@ class ServingEngine:
 
             dp = dp_axes(mesh)
             dp_size = math.prod(dict(mesh.shape)[a] for a in dp) if dp else 1
-            if dp_size > 1 and n_slots % dp_size == 0:
+            if dp_size > 1 and n_slots % dp_size:
+                # an uneven split does NOT degrade gracefully: the slot
+                # axis shards over the data axes and XLA pads the ragged
+                # shard, silently generating wrong tokens (dense cache,
+                # single-device-verified repro at n_slots=3 on a 2-dp
+                # mesh) — fail loudly instead
+                raise ValueError(
+                    f"n_slots={n_slots} must be a multiple of the mesh "
+                    f"data-parallel size {dp_size}: the slot axis shards "
+                    "over the data axes and an uneven split mis-shards "
+                    "the cache stripes"
+                )
+            if dp_size > 1:
                 data_shards = dp_size
 
         if cache == "paged":
@@ -416,9 +455,18 @@ class ServingEngine:
                 )
                 if adapters is not None:
                     self.bank = served
+            if self.pool is not None:
+                # resident groups placed once (replicated, the adapter
+                # rule); the bank's sharding tree feeds every serving
+                # jit's in_shardings for the bank argument
+                self.pool.place(mesh)
+                self._bank_sh = peft_shardings(mesh, self.pool.device_bank())
+            else:
+                self._bank_sh = None
         else:
             self._cache_sh = self._wave_sh = self._chunk_sh = None
             self._repl = None
+            self._bank_sh = None
         self.params = params
         self.peft = served if adapters is None else None
         self.cache = (
@@ -430,15 +478,26 @@ class ServingEngine:
         self._last_token = np.zeros((n_slots,), np.int32)
         # jitted-dispatch counters (benchmarks assert O(1) prefill admission)
         # + cache-memory gauges (refreshed by _update_gauges)
+        # adapter byte gauges, split RESIDENT (device state the decode
+        # ticks read: one AdapterSet, a whole static bank, or the pool's
+        # fixed-capacity row bank) vs REGISTRY (host-side factor bytes of
+        # every registered tenant — pool mode only; 0 elsewhere).
+        # ``adapter_bytes`` stays the resident figure for back-compat.
+        if self.pool is not None:
+            resident_b = self.pool.resident_nbytes()
+            registry_b = self.pool.store.nbytes
+        else:
+            resident_b = int(sum(
+                addressable_nbytes(leaf)
+                for leaf in jax.tree_util.tree_leaves(served)
+            )) if served is not None else 0
+            registry_b = 0
         self.stats: Dict[str, Any] = {
             "decode_calls": 0, "prefill_calls": 0, "chunk_calls": 0,
             "preemptions": 0,
-            # per-host adapter-state bytes: one AdapterSet, or the whole
-            # bank (N tenants + neutral rows + any QuanTA rebase weights)
-            "adapter_bytes": int(sum(
-                addressable_nbytes(leaf)
-                for leaf in jax.tree_util.tree_leaves(served)
-            )) if served is not None else 0,
+            "adapter_bytes": resident_b,
+            "adapter_bytes_resident": resident_b,
+            "adapter_bytes_registry": registry_b,
             "adapter_tenants": (
                 self.bank.num_tenants if self.bank is not None else 0
             ),
@@ -501,11 +560,22 @@ class ServingEngine:
         )
         repl = self._repl
         banked = self.bank is not None
+        pooled = self.pool is not None
+        bank_sh = self._bank_sh
         # every serving jit gains one trailing traced (B,) adapter_ids
         # argument when a bank is attached — per-request selection stays
-        # inside the single fused program (O(1) dispatch either way)
+        # inside the single fused program (O(1) dispatch either way).
+        # Pool mode appends the RESIDENT BANK itself as a further traced
+        # argument: hot-swapped rows must reach already-compiled programs,
+        # and a closed-over bank would bake the rows in as constants.
         if self._paged:
-            if banked:
+            if pooled:
+                fn = lambda cache, toks, bt, aids, bank: model.decode_step(  # noqa: E731, E501
+                    params, bank, cache, {"tokens": toks},
+                    block_tables=bt, mesh=decode_mesh, adapter_ids=aids,
+                )
+                in_sh = (cache_sh, repl, repl, repl, bank_sh)
+            elif banked:
                 fn = lambda cache, toks, bt, aids: model.decode_step(  # noqa: E731
                     params, served, cache, {"tokens": toks},
                     block_tables=bt, mesh=decode_mesh, adapter_ids=aids,
@@ -518,7 +588,13 @@ class ServingEngine:
                 )
                 in_sh = (cache_sh, repl, repl)
         else:
-            if banked:
+            if pooled:
+                fn = lambda cache, toks, aids, bank: model.decode_step(  # noqa: E731
+                    params, bank, cache, {"tokens": toks},
+                    adapter_ids=aids,
+                )
+                in_sh = (cache_sh, repl, repl, bank_sh)
+            elif banked:
                 fn = lambda cache, toks, aids: model.decode_step(  # noqa: E731
                     params, served, cache, {"tokens": toks},
                     adapter_ids=aids,
@@ -544,6 +620,15 @@ class ServingEngine:
         )
         if admission != "prefill":
             self._prefill = None
+        elif pooled:
+            self._prefill = _jit(
+                lambda toks, lens, aids, bank: model.prefill(
+                    params, bank, {"tokens": toks}, lengths=lens,
+                    adapter_ids=aids,
+                ),
+                in_sh=(repl, repl, repl, bank_sh),
+                out_sh=(repl, wave_sh),
+            )
         elif banked:
             self._prefill = _jit(
                 lambda toks, lens, aids: model.prefill(
@@ -563,6 +648,16 @@ class ServingEngine:
             )
         if not self._can_chunk:
             self._chunk_fn = None
+        elif pooled:
+            self._chunk_fn = _jit(
+                lambda staged, toks, pos, n_valid, aids, bank:
+                model.prefill_chunk(
+                    params, bank, {"tokens": toks}, staged, pos, n_valid,
+                    adapter_ids=aids,
+                ),
+                in_sh=(chunk_sh, repl, repl, repl, repl, bank_sh),
+                out_sh=(repl, chunk_sh),
+            )
         elif banked:
             self._chunk_fn = _jit(
                 lambda staged, toks, pos, n_valid, aids: model.prefill_chunk(
@@ -626,6 +721,9 @@ class ServingEngine:
         self.compile_guard.register("insert", self._insert_fn,
                                     bounds["insert"])
         self.compile_guard.register("sample", self._sample, bounds["sample"])
+        if self.pool is not None:
+            self.compile_guard.register("swap", self.pool.swap_fn,
+                                        bounds["swap"])
         self._update_gauges()
 
     # ------------------------------------------------------ compile bounds
@@ -652,6 +750,10 @@ class ServingEngine:
           by up to ``prefill_chunk + seq_bucket``.
         * ``sample`` — 1: the greedy sampler only ever sees the fused
           decode's fixed ``(n_slots, 1, V)`` logits.
+        * ``swap`` — pool mode only: the adapter pool's donated row
+          scatter traces once per distinct tenant STRUCTURE profile
+          (``AdapterPool.n_profiles``) — row indices and global ids are
+          traced scalars, so residency churn itself never recompiles.
 
         Under a mesh, cache-carrying entry points get **+1 slack**: the
         first tick feeds the freshly ``device_put`` cache, whose
@@ -666,13 +768,16 @@ class ServingEngine:
         n_buckets = -(-self.max_len // self.seq_bucket)
         slack = 1 if self.mesh is not None else 0
         chunked = getattr(self, "_can_chunk", False)
-        return {
+        bounds = {
             "decode": 1 + slack,
             "prefill": n_buckets,
             "chunk": (n_buckets + 2 if chunked else 1) + slack,
             "insert": self.n_slots * (n_buckets + 2),
             "sample": 1 + slack,
         }
+        if getattr(self, "pool", None) is not None:
+            bounds["swap"] = self.pool.n_profiles + slack
+        return bounds
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request, adapter: Optional[str] = None) -> None:
@@ -719,13 +824,30 @@ class ServingEngine:
 
     def _decode_args(self, toks) -> List[Any]:
         """Positional args of the fused decode jit for this engine shape
-        (cache, tokens [, block_tables] [, adapter_ids])."""
+        (cache, tokens [, block_tables] [, adapter_ids] [, bank])."""
         args: List[Any] = [self.cache, toks]
         if self._paged:
             args.append(self.pager.device_tables())
         if self.bank is not None:
             args.append(jnp.asarray(self._adapter_ids))
+        if self.pool is not None:
+            args.append(self.pool.device_bank())
         return args
+
+    def _acquire_adapter(self, req: Request) -> bool:
+        """Pool mode: pin the request's tenant (loading it — possibly
+        evicting an LRU idle tenant — if non-resident).  The LAST
+        admission check: False defers the request without tearing
+        anything down.  Static banks / single sets are always ready."""
+        if self.pool is None:
+            return True
+        return self.pool.acquire(req.adapter)
+
+    def _release_adapter(self, req: Request) -> None:
+        """Pool mode: unpin when the request leaves its slot (completion
+        or preemption) — the tenant stays resident until LRU-evicted."""
+        if self.pool is not None:
+            self.pool.release(req.adapter)
 
     @staticmethod
     def _tokens(req: Request) -> List[int]:
@@ -788,6 +910,10 @@ class ServingEngine:
             tick_p99=self.tick_hist.percentile(99),
             queue_depth=self.queue_depths(),
         )
+        if self.pool is not None:
+            pstats = self.pool.stats()
+            pstats["adapter_bytes"] = pstats["adapter_bytes_resident"]
+            self.stats.update(pstats)
         if self.pager is not None:
             self.stats.update(self.pager.stats())
             self.stats["kv_quant"] = self.stats.get("kv_quant") or "none"
@@ -844,6 +970,8 @@ class ServingEngine:
                 # a time); shorter prompts behind it may still wave-admit
                 # into the remaining free slots this tick.
                 if self._chunking is None:
+                    if not self._acquire_adapter(nxt):
+                        break        # tenant unloadable: defer admission
                     self._start_chunked(
                         q.popleft(), free[len(wave)]
                     )
@@ -852,6 +980,8 @@ class ServingEngine:
                     ]
                     continue
                 break
+            if not self._acquire_adapter(nxt):
+                break                # tenant unloadable: defer admission
             if self._paged:
                 # reserve NOW (alloc at pop time): later wave members and
                 # the mid-decode alloc-on-append see the reduced pool, so
@@ -880,7 +1010,12 @@ class ServingEngine:
             lens[row] = len(p)
         for row, req in enumerate(wave):
             wave_ids[row] = self._req_adapter_id(req)
-        if self.bank is not None:
+        if self.pool is not None:
+            logits, wave_cache = self._prefill(
+                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(wave_ids),
+                self.pool.device_bank(),
+            )
+        elif self.bank is not None:
             logits, wave_cache = self._prefill(
                 jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(wave_ids)
             )
@@ -963,7 +1098,13 @@ class ServingEngine:
         n_valid = min(c, len(tokens) - pos)
         toks = np.zeros((1, c), np.int32)
         toks[0, :n_valid] = tokens[pos : pos + n_valid]
-        if self.bank is not None:
+        if self.pool is not None:
+            logits, st["staged"] = self._chunk_fn(
+                st["staged"], jnp.asarray(toks), pos, n_valid,
+                jnp.asarray([st["aid"]], jnp.int32),
+                self.pool.device_bank(),
+            )
+        elif self.bank is not None:
             logits, st["staged"] = self._chunk_fn(
                 st["staged"], jnp.asarray(toks), pos, n_valid,
                 jnp.asarray([st["aid"]], jnp.int32),
@@ -1045,6 +1186,9 @@ class ServingEngine:
         self.slots[slot] = None
         self._adapter_ids[slot] = 0
         self.pager.release(slot)
+        # unpin the tenant: its rows may be reclaimed while the request
+        # queues, and re-admission re-acquires (reloading if evicted)
+        self._release_adapter(req)
         (self.requeue_hook or self.queue.appendleft)(req)
         self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
 
@@ -1123,6 +1267,7 @@ class ServingEngine:
                 req.done = True
                 self.slots[i] = None
                 self._adapter_ids[i] = 0     # freed slots decode as base
+                self._release_adapter(req)   # unpin: evictable again
                 if self._paged:
                     self.pager.release(i)   # free-on-eviction
         if self._paged:

@@ -29,6 +29,10 @@ as they land:
   streamed outputs are **token-for-token identical** to the closed
   loop by construction (pinned by ``tests/test_frontend.py`` across
   all three families, dense and paged, mixed adapter tenants).
+  Hot-swap adapter pools (``serve.adapter_pool.AdapterPool``) compose
+  transparently: pinning/unpinning rides the engine's admission and
+  ``requeue_hook`` paths the front end already flows through, and a
+  deferred tenant (all rows pinned) simply stays queued in its class.
 * **Streaming** — ``submit()`` returns a :class:`TokenStream`: iterate
   it (``for tok in stream`` or ``async for tok in stream``) to receive
   tokens as their tick lands; ``result()`` blocks until EOS/budget and

@@ -15,9 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import dataclasses
+
 from repro.configs import get_smoke
 from repro.core.adapters import RebasedAdapter
-from repro.core.baselines import DoraAdapter, KronaAdapter, LoraAdapter
+from repro.core.baselines import (
+    DoraAdapter,
+    DotaAdapter,
+    KronaAdapter,
+    LoraAdapter,
+)
 from repro.core.quanta import QuantaAdapter
 from repro.core.peft import (
     AdapterSet,
@@ -47,6 +54,9 @@ def _make(kind, key, d_in=D_IN, d_out=D_OUT):
         return QuantaAdapter.create(key, d_in, d_out, n_axes=3)
     if kind == "quanta_square":
         return QuantaAdapter.create(key, d_in, d_in, n_axes=3)
+    if kind == "quanta_foldfree":
+        ad = QuantaAdapter.create(key, d_in, d_out, n_axes=3)
+        return dataclasses.replace(ad, frozen=ad.tensors)
     if kind == "lora":
         return LoraAdapter.create(key, d_in, d_out, rank=4)
     if kind == "krona":
@@ -54,10 +64,14 @@ def _make(kind, key, d_in=D_IN, d_out=D_OUT):
     if kind == "dora":
         w0 = jax.random.normal(jax.random.fold_in(key, 9), (d_in, d_out))
         return DoraAdapter.create(key, w0, rank=4)
+    if kind == "dota":
+        w0 = jax.random.normal(jax.random.fold_in(key, 9), (d_in, d_out))
+        return DotaAdapter.create(key, w0, rank=2, n_axes=3)
     raise KeyError(kind)
 
 
-KINDS = ["quanta", "quanta_square", "lora", "krona", "dora"]
+KINDS = ["quanta", "quanta_square", "quanta_foldfree", "lora", "krona",
+         "dora", "dota"]
 
 
 @pytest.mark.parametrize("kind", KINDS)
@@ -75,7 +89,8 @@ def test_apply_matches_merged_weight(kind):
     )
 
 
-@pytest.mark.parametrize("kind", [k for k in KINDS if k != "dora"])
+@pytest.mark.parametrize("kind", [k for k in KINDS
+                                  if k not in ("dora", "dota")])
 def test_delta_matches_matrix(kind):
     """Protocol contract #2 (delta-form methods): the factored ``delta``
     equals multiplication by the materialized ``matrix``."""
@@ -147,13 +162,92 @@ def test_num_params_counts_trainable_leaves():
     assert lora.num_params == lora.a.size + lora.b.size
     qa = _make("quanta", jax.random.PRNGKey(0))
     assert qa.num_params == sum(t.size for t in qa.tensors)
+    # fold-free: the frozen copy S is a serving artifact, not trainable
+    ff = _make("quanta_foldfree", jax.random.PRNGKey(0))
+    assert ff.num_params == qa.num_params
+    dt = _make("dota", jax.random.PRNGKey(0))
+    assert dt.num_params == sum(c.size for c in dt.cores) + dt.m.size
+
+
+def test_fold_free_quanta_matches_folded():
+    """Eq. 8 computed directly (fold-free) and Eq. 9 (S folded into the
+    base) are the same function — at init AND after training drift."""
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(jax.random.PRNGKey(2), (D_IN, D_OUT))
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, D_IN))
+    ad = QuantaAdapter.create(key, D_IN, D_OUT, n_axes=3)
+    free = dataclasses.replace(ad, frozen=ad.tensors)
+    from repro.core.quanta import fold_frozen_copy
+    w_folded = fold_frozen_copy(w0, ad)
+    # at init: fold-free delta is bitwise zero (T == S)
+    np.testing.assert_array_equal(
+        np.asarray(free.delta(x)), np.zeros((3, D_OUT), np.float32)
+    )
+    # after drift: same adapted function, and merge returns to agreement
+    drift = jax.tree_util.tree_map(
+        lambda t: t + 0.1, dataclasses.replace(free, frozen=None)
+    )
+    free_t = dataclasses.replace(drift, frozen=free.frozen)
+    fold_t = dataclasses.replace(ad, tensors=drift.tensors)
+    np.testing.assert_allclose(
+        np.asarray(free_t.apply(x, w0)),
+        np.asarray(fold_t.apply(x, w_folded)), rtol=2e-5, atol=2e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(free_t.merge(w0)), np.asarray(fold_t.merge(w_folded)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_fold_free_quanta_frozen_gets_no_grads():
+    """The frozen copy S rides in the trainable pytree but stop_gradient
+    keeps it out of the gradients; x-gradients still flow through the S
+    chain (it contributes to the output)."""
+    ad = _make("quanta_foldfree", jax.random.PRNGKey(0))
+    ad = dataclasses.replace(
+        _perturb(dataclasses.replace(ad, frozen=None), jax.random.PRNGKey(1)),
+        frozen=ad.frozen,
+    )
+    w = jax.random.normal(jax.random.PRNGKey(2), (D_IN, D_OUT))
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, D_IN))
+    g = jax.grad(lambda a: a.apply(x, w).sum())(ad)
+    assert all(bool(jnp.all(f == 0)) for f in g.frozen)
+    assert any(bool(jnp.any(t != 0)) for t in g.tensors)
+    gx = jax.grad(lambda xx: ad.apply(xx, w).sum())(x)
+    # d/dx includes -S^T: differs from the no-S adapter's x-gradient
+    gx_no_s = jax.grad(
+        lambda xx: dataclasses.replace(ad, frozen=None).apply(xx, w).sum()
+    )(x)
+    assert not np.allclose(np.asarray(gx), np.asarray(gx_no_s))
+
+
+def test_fold_free_attach_leaves_base_untouched():
+    """PeftConfig(fold=False): attach returns the base weights bitwise
+    unchanged and stamps S onto the adapters (spec.fold records it)."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, aset = attach(jax.random.PRNGKey(1), params,
+                        _attach_cfg("quanta_foldfree"))
+    for p0, pb in zip(jax.tree_util.tree_leaves(params),
+                      jax.tree_util.tree_leaves(base)):
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(pb))
+    assert all(not s.fold for s in aset.specs)
+    for ad in aset.flat().values():
+        assert ad.fold_free
+        np.testing.assert_array_equal(
+            np.asarray(ad.tensors[0]), np.asarray(ad.frozen[0])
+        )
 
 
 # ---------------------------------------------------------------- attach API
-METHODS = ["quanta", "lora", "krona", "dora"]
+METHODS = ["quanta", "quanta_foldfree", "lora", "krona", "dora", "dota"]
 
 
 def _attach_cfg(method):
+    if method == "quanta_foldfree":
+        return PeftConfig(method="quanta", fold=False, scheme=None, n_axes=3,
+                          rank=4, krona_a=16)
     return PeftConfig(method=method, scheme=None, n_axes=3, rank=4,
                       krona_a=16)
 

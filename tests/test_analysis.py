@@ -45,10 +45,11 @@ def _checks(rec, **kw):
 # ----------------------------------------------- kernel contract checker
 
 def test_repo_kernels_all_clean_and_registered():
-    """The real kernels must pass, and all seven families are registered."""
+    """The real kernels must pass, and all eight families are registered."""
     assert ak.registered_kernels() == [
-        "flash_decode", "flash_fwd", "paged_decode", "paged_decode_quant",
-        "quanta_apply", "quanta_linear", "quantized_matmul",
+        "banked_gather", "flash_decode", "flash_fwd", "paged_decode",
+        "paged_decode_quant", "quanta_apply", "quanta_linear",
+        "quantized_matmul",
     ]
     findings = ak.check_kernels()
     assert findings == [], [str(f) for f in findings]

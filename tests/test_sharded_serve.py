@@ -249,6 +249,65 @@ def test_sharded_adapter_bank_matches_single_device():
 
 
 @multidevice
+def test_sharded_adapter_pool_matches_single_device():
+    """Hot-swap lifecycle, mesh leg: an ``AdapterPool`` engine churning
+    4 LoRA tenants through a capacity-2 resident bank on the
+    2x`data` . 4x`model` mesh — swaps rewrite replicated bank rows
+    between ticks (``pool.place`` + the bank traced-argument shardings)
+    and must generate token-for-token what the single-device pool
+    engine does, with zero serving-jit recompiles on both."""
+    from repro.core.peft import PeftConfig, attach
+    from repro.serve import AdapterPool, AdapterStore
+
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def lora(key):
+        _, s = attach(jax.random.PRNGKey(key), params,
+                      PeftConfig(method="lora", rank=4))
+        return jax.tree_util.tree_map(
+            lambda x: x + 0.15 * jax.random.normal(
+                jax.random.PRNGKey(key + 100), x.shape, x.dtype
+            ),
+            s,
+        )
+
+    tenants = ["t0", "t1", "t2", None, "t3", "t0", "t2", "t1"]
+
+    def run(mesh):
+        store = AdapterStore(max_tenants=8)
+        for i in range(4):
+            store.register(f"t{i}", lora(i + 1))
+        pool = AdapterPool.build(params, store, capacity=2)
+        engine = ServingEngine(model, params, adapters=pool, n_slots=4,
+                               max_len=64, mesh=mesh)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=5, adapter=t)
+                for i, (p, t) in enumerate(zip(PROMPTS, tenants))]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        assert all(r.done for r in reqs)
+        engine.compile_guard.assert_ok()
+        assert engine.stats["adapter_evictions"] > 0, "no churn exercised"
+        return [r.output for r in reqs]
+
+    assert run(_mesh()) == run(None)
+
+
+@multidevice
+def test_uneven_slot_split_rejected():
+    """n_slots not divisible by the mesh data-parallel size must raise:
+    the slot axis shards over the data axes, and an uneven split used to
+    silently generate wrong tokens (XLA pads the ragged shard)."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="multiple of the mesh"):
+        ServingEngine(model, params, n_slots=3, max_len=64, mesh=_mesh())
+
+
+@multidevice
 def test_sharded_quantized_base_matches_single_device():
     """Quantized-base mesh leg: with ``base_quant="nf4"`` the packed
     uint8 codes and per-block scales take the projection sharding rules
